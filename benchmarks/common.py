@@ -1,0 +1,36 @@
+"""Shared helpers for the benchmark suite.
+
+Output convention: ``name,us_per_call,derived`` CSV rows (one per
+measurement), where us_per_call is the modeled/measured latency of one
+decode forward and derived carries the benchmark-specific headline
+(N_max, over-prediction factor, ...).
+"""
+from __future__ import annotations
+
+import sys
+from typing import Iterable, List, Optional, Sequence
+
+from repro.core import LatencyCurve
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def curve_from_pairs(pairs, baseline_n: int = 1) -> LatencyCurve:
+    ns = [int(n) for n, _ in pairs]
+    ts = [float(t) for _, t in pairs]
+    return LatencyCurve(ns, ts, baseline_n)
+
+
+def n_sweep(limit: int = 1024) -> List[int]:
+    """Dense sweep at small N (where granularity boundaries live), then
+    16-aligned steps including every power of two — the paper's sampled
+    decode-position sets land on tile/padding boundaries."""
+    ns = list(range(1, 33))
+    step = [40, 48, 56, 64, 80, 96, 112, 128, 160, 192, 224, 256, 320,
+            384, 448, 512, 640, 768, 896, 1024, 1280, 1536, 1792, 2048]
+    ns += [v for v in step if v <= limit]
+    # one-past-boundary probes expose the staircase edges
+    ns += [v + 1 for v in (64, 128, 256, 512) if v + 1 <= limit]
+    return sorted(set(ns))

@@ -1,0 +1,77 @@
+"""CPU wall-clock sanity layer (DESIGN.md §5 evidence level 3).
+
+Real silicon T(N) sweeps at small module shapes: demonstrates the
+flat-then-rise latency shape and the paper's measurement protocol
+(warmup, rounds, median-of-medians) on actual hardware.  Absolute values
+are CPU-specific — the TPU-target numbers come from the simulator and
+the dry-run roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import extract_nmax, sweep_callable
+
+from benchmarks.common import emit
+
+D_MODEL, D_FF = 512, 1408
+L_CACHE = 2048
+HEADS, HEAD_DIM = 8, 64
+
+
+def dense_ffn_sweep():
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (D_MODEL, D_FF), jnp.float32)
+    w2 = jax.random.normal(key, (D_FF, D_MODEL), jnp.float32)
+
+    def make(n):
+        x = jax.random.normal(key, (n, D_MODEL), jnp.float32)
+
+        @jax.jit
+        def f(x):
+            return (x @ w1) @ w2
+        f(x).block_until_ready()
+        return lambda: f(x)
+
+    ns = [1, 2, 4, 8, 16, 32, 64, 128]
+    curve = sweep_callable(make, ns, warmup=2, rounds=3, iters=5)
+    nmax = extract_nmax(curve, 0.2)
+    for n, t in zip(curve.ns, curve.times):
+        emit(f"cpu_wallclock/dense_ffn/N{n}", t * 1e6)
+    emit("cpu_wallclock/dense_ffn/nmax", curve.baseline_time * 1e6,
+         f"measured={nmax}")
+
+
+def attention_sweep():
+    key = jax.random.PRNGKey(1)
+    kc = jax.random.normal(key, (1, L_CACHE, HEADS, HEAD_DIM), jnp.float32)
+    vc = jax.random.normal(key, (1, L_CACHE, HEADS, HEAD_DIM), jnp.float32)
+
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    def make(n):
+        q = jax.random.normal(key, (1, n, HEADS, HEAD_DIM), jnp.float32)
+
+        @jax.jit
+        def f(q):
+            return decode_attention_ref(q, kc, vc, L_CACHE - n)
+        f(q).block_until_ready()
+        return lambda: f(q)
+
+    ns = [1, 2, 4, 8, 16, 32, 64]
+    curve = sweep_callable(make, ns, warmup=2, rounds=3, iters=5)
+    nmax = extract_nmax(curve, 0.2)
+    for n, t in zip(curve.ns, curve.times):
+        emit(f"cpu_wallclock/attention/N{n}", t * 1e6)
+    emit("cpu_wallclock/attention/nmax", curve.baseline_time * 1e6,
+         f"measured={nmax}")
+
+
+def run() -> None:
+    dense_ffn_sweep()
+    attention_sweep()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Parallel-decoding serving demo: AR baseline vs NFP-budgeted
+speculative decoding vs diffusion-style block decoding on one model.
+
+Demonstrates the paper's capacity-normalized evaluation (Sec. J.2.3):
+the same system-side budget, different algorithm-side utilization.
+
+Run: PYTHONPATH=src python examples/serve_parallel_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving import (DecodeEngine, DiffusionBlockDecoder,
+                           SpeculativeDecoder)
+
+TOKENS = 48
+
+
+def main():
+    cfg = get_config("stablelm_3b", reduced=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                                cfg.vocab_size)
+
+    def fresh():
+        return DecodeEngine(cfg, params, batch=1, max_len=512)
+
+    # --- AR baseline (N=1 per forward) ------------------------------------
+    eng = fresh()
+    t0 = time.perf_counter()
+    ar = np.asarray(eng.greedy_generate(prompt, TOKENS)[0])
+    t_ar = time.perf_counter() - t0
+    print(f"AR greedy:       {TOKENS} tokens, {TOKENS} forwards, "
+          f"{t_ar:.2f}s")
+
+    # --- speculative, verification length from the NFP budget -------------
+    eng = fresh()
+    budget = eng.nfp_budget()
+    spec = SpeculativeDecoder(eng, gamma=min(budget - 1, 8))
+    t0 = time.perf_counter()
+    toks, stats = spec.generate(prompt, TOKENS)
+    t_spec = time.perf_counter() - t0
+    print(f"speculative:     {stats['tokens']} tokens, "
+          f"{stats['forwards']} forwards "
+          f"({stats['tokens_per_forward']:.2f} tok/fwd, "
+          f"utilization {stats['position_utilization']:.2f}), {t_spec:.2f}s")
+    print(f"  lossless vs AR: {bool(np.array_equal(ar, toks[:TOKENS]))}  "
+          f"(NFP budget={budget})")
+
+    # --- diffusion-style block decode --------------------------------------
+    eng = fresh()
+    diff = DiffusionBlockDecoder(eng, block_size=min(budget - 1, 12),
+                                 refine_steps=3)
+    t0 = time.perf_counter()
+    dtoks, dstats = diff.generate(prompt, TOKENS)
+    t_diff = time.perf_counter() - t0
+    print(f"diffusion-block: {dstats['tokens']} tokens, "
+          f"{dstats['forwards']} forwards "
+          f"({dstats['tokens_per_forward']:.2f} tok/fwd, "
+          f"utilization {dstats['position_utilization']:.2f}), {t_diff:.2f}s")
+    print("\ncapacity-normalized view: all methods spend positions from the"
+          "\nsame near-free budget; tokens/forward is the algorithm-side"
+          "\nutilization the paper separates from system capacity.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro.checkpoint — fault-tolerant checkpointing."""
+from repro.checkpoint.checkpoint import (AsyncCheckpointer, latest_step,
+                                         restore, save)
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

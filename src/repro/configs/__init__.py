@@ -1,0 +1,42 @@
+"""repro.configs — assigned architectures (+ paper-analogue configs).
+
+Every architecture is selectable by id: ``get_config("<arch-id>")`` and
+``get_config("<arch-id>", reduced=True)`` for the CPU smoke variant.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.arch import ArchConfig
+
+_REGISTRY: Dict[str, "module"] = {}
+
+ARCH_IDS = [
+    "granite_moe_3b_a800m",
+    "mixtral_8x22b",
+    "minicpm3_4b",
+    "starcoder2_3b",
+    "phi3_medium_14b",
+    "stablelm_3b",
+    "zamba2_1p2b",
+    "whisper_tiny",
+    "phi3_vision_4p2b",
+    "falcon_mamba_7b",
+]
+
+# paper-analogue configs (model-level validation targets of the paper)
+PAPER_IDS = ["wedlm8b_like", "llada_mini_like"]
+
+
+def _norm(name: str) -> str:
+    return (name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{_norm(name)}")
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def all_configs(reduced: bool = False) -> Dict[str, ArchConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

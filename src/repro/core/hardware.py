@@ -1,0 +1,53 @@
+"""Hardware specifications and the balance point rho = phi / beta.
+
+TPU v5e is the deployment target (roofline constants fixed by the brief).
+The paper's three GPUs are kept as presets so the reproduction can be
+cross-checked against the paper's own numbers (Table 2 / Table 24).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    phi: float           # peak bf16/fp16 compute, FLOP/s
+    beta: float          # peak HBM bandwidth, bytes/s
+    ici: float = 0.0     # per-link interconnect bandwidth, bytes/s
+    n_ici_links: int = 0
+    hbm_bytes: float = 0.0
+    vmem_bytes: float = 0.0
+    mxu_dim: int = 128   # systolic array side (TPU); tensor-core tile (GPU)
+
+    @property
+    def rho(self) -> float:
+        """Hardware balance point (FLOP per byte)."""
+        return self.phi / self.beta
+
+
+# --- deployment target (constants fixed by the brief) ---------------------
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    phi=197e12,          # bf16 TFLOP/s per chip
+    beta=819e9,          # HBM GB/s
+    ici=50e9,            # ~GB/s per ICI link
+    n_ici_links=4,
+    hbm_bytes=16 * 2**30,
+    vmem_bytes=128 * 2**20,
+    mxu_dim=128,
+)
+
+# --- paper's GPUs (Table 2) — used to validate the reproduction -----------
+H20 = HardwareSpec("h20", phi=148e12, beta=4.0e12)
+A800 = HardwareSpec("a800", phi=312e12, beta=2.039e12)
+H800 = HardwareSpec("h800", phi=989e12, beta=3.35e12)
+
+PRESETS = {h.name: h for h in (TPU_V5E, H20, A800, H800)}
+
+BYTES_BF16 = 2
+BYTES_F32 = 4
+
+
+def get_hardware(name: str) -> HardwareSpec:
+    return PRESETS[name]

@@ -1,0 +1,5 @@
+"""repro.data — token pipelines."""
+from repro.data.pipeline import (BinaryShards, DataConfig, SyntheticLM,
+                                 make_pipeline)
+
+__all__ = ["DataConfig", "SyntheticLM", "BinaryShards", "make_pipeline"]

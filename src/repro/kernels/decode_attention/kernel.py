@@ -1,0 +1,126 @@
+"""Pallas TPU multi-position decode attention (flash-style, query-tiled).
+
+The query-tile BlockSpec of this kernel IS the M_attn granularity of the
+NFP principle: q rows are padded to ``q_block`` (selected by
+``core.granularity.select_q_block``) before launch, so physical work is
+quantized exactly like FlashAttention's kBlockM / FlashInfer's CTA_TILE_Q
+(paper App. F) — re-derived for the TPU memory hierarchy: the q tile and
+one (k_block, head_dim) KV tile live in VMEM, accumulation runs in f32
+VREGs, and the scores matmul maps onto the MXU with M = g*q_block.
+
+Layout (prepared by ops.py):
+  q: (b, kv_heads, g, n_pad, dh)   g = query heads per KV head (GQA)
+  k: (b, kv_heads, s_pad, dh)
+  v: (b, kv_heads, s_pad, dh)
+  cache_len: (1,) i32 scalar-prefetch (positions already in cache)
+Output:
+  o: (b, kv_heads, g, n_pad, dh)
+Grid: (b, kv_heads, n_q_tiles, n_kv_tiles) — kv tiles innermost, online
+softmax state in VMEM scratch persists across kv tiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(cache_len_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *,
+                 q_block: int, k_block: int, g: int, scale: float,
+                 window: Optional[int], n_kv_tiles: int):
+    iq = pl.program_id(2)
+    ij = pl.program_id(3)
+
+    @pl.when(ij == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = g * q_block
+    q = q_ref[0, 0].reshape(rows, q_ref.shape[-1]).astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (kb, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale          # (rows, kb)
+
+    # --- causal / window / validity mask -----------------------------------
+    cache_len = cache_len_ref[0]
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, k_block), 0)
+    q_off = row_ids % q_block                                # row -> q index
+    q_pos = cache_len + iq * q_block + q_off
+    kv_pos = (ij * k_block
+              + jax.lax.broadcasted_iota(jnp.int32, (rows, k_block), 1))
+    mask = kv_pos <= q_pos
+    if window is not None:
+        mask &= kv_pos > (q_pos - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    # --- online softmax ------------------------------------------------------
+    m_prev = m_ref[...]
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (alpha * acc_ref[...]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ij == n_kv_tiles - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc_ref[...] / l).reshape(g, q_block, acc_ref.shape[-1])
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, cache_len, *, q_block: int,
+                            k_block: int, scale: float,
+                            window: Optional[int] = None,
+                            interpret: bool = False):
+    """q: (b, kv, g, n_pad, dh); k/v: (b, kv, s_pad, dh); cache_len: (1,) i32."""
+    b, kv, g, n_pad, dh = q.shape
+    s_pad = k.shape[2]
+    n_q_tiles = n_pad // q_block
+    n_kv_tiles = s_pad // k_block
+    grid = (b, kv, n_q_tiles, n_kv_tiles)
+
+    kernel = functools.partial(
+        _attn_kernel, q_block=q_block, k_block=k_block, g=g, scale=scale,
+        window=window, n_kv_tiles=n_kv_tiles)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, q_block, dh),
+                             lambda ib, ik, iq, ij, *_: (ib, ik, 0, iq, 0)),
+                pl.BlockSpec((1, 1, k_block, dh),
+                             lambda ib, ik, iq, ij, *_: (ib, ik, ij, 0)),
+                pl.BlockSpec((1, 1, k_block, dh),
+                             lambda ib, ik, iq, ij, *_: (ib, ik, ij, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, q_block, dh),
+                                   lambda ib, ik, iq, ij, *_: (ib, ik, 0, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g * q_block, 1), jnp.float32),   # running max
+                pltpu.VMEM((g * q_block, 1), jnp.float32),   # running sum
+                pltpu.VMEM((g * q_block, dh), jnp.float32),  # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, n_pad, dh), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k, v)

@@ -1,0 +1,53 @@
+"""jit'd wrapper: layout prep + query-tile padding (the M_attn mechanism).
+
+``decode_attention`` pads the logical N query rows up to the selected
+q_block before launching the kernel — physical work therefore changes only
+at tile boundaries (paper Eq. 33-34), which is exactly the granularity the
+NFP predictor reads from ``core.granularity``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.granularity import round_up, select_q_block
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+K_BLOCK = 128
+
+
+@functools.partial(jax.jit, static_argnames=("window", "q_block_override",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, total_len, *,
+                     window: Optional[int] = None,
+                     q_block_override: Optional[int] = None,
+                     interpret: bool = True):
+    """q: (b, n, h, dh); k/v_cache: (b, s, kv, dh); total_len = cache_len + n.
+
+    Returns (b, n, h, dh).  interpret=True validates the TPU kernel body on
+    CPU; on real TPU pass interpret=False.
+    """
+    b, n, h, dh = q.shape
+    s = k_cache.shape[1]
+    kv = k_cache.shape[2]
+    g = h // kv
+    q_block = q_block_override or select_q_block(n, dh)
+    n_pad = round_up(n, q_block)
+    s_pad = round_up(s, K_BLOCK)
+    scale = 1.0 / (dh ** 0.5)
+
+    qk = q.reshape(b, n, kv, g, dh).transpose(0, 2, 3, 1, 4)   # (b,kv,g,n,dh)
+    qk = jnp.pad(qk, ((0, 0), (0, 0), (0, 0), (0, n_pad - n), (0, 0)))
+    kk = jnp.pad(k_cache.transpose(0, 2, 1, 3),
+                 ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    vk = jnp.pad(v_cache.transpose(0, 2, 1, 3),
+                 ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+    cache_len = jnp.asarray(total_len - n, jnp.int32).reshape(1)
+
+    o = decode_attention_pallas(qk, kk, vk, cache_len, q_block=q_block,
+                                k_block=K_BLOCK, scale=scale, window=window,
+                                interpret=interpret)
+    return o[:, :, :, :n].transpose(0, 3, 1, 2, 4).reshape(b, n, h, dh)

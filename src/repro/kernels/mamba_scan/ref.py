@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the selective scan recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, b_in, c_in, a, h0):
+    """x/dt: (b, s, di); b_in/c_in: (b, s, ds); a: (di, ds); h0: (b, di, ds).
+
+    Returns (y (b, s, di), h_final (b, di, ds)), all f32.
+    """
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b_in, 1, 0), jnp.moveaxis(c_in, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

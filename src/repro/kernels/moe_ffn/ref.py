@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the grouped expert FFN (no padding, no blocking)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(x_sorted, params: Dict, group_sizes,
+                    activation: str = "swiglu"):
+    """Dense per-expert oracle: every row is run through its expert's FFN
+    selected by masking — O(M*E) compute, exact semantics."""
+    m, d = x_sorted.shape
+    e = group_sizes.shape[0]
+    expert_of_row = jnp.searchsorted(jnp.cumsum(group_sizes),
+                                     jnp.arange(m), side="right")
+    out = jnp.zeros((m, d), jnp.float32)
+    for ei in range(e):
+        sel = (expert_of_row == ei)[:, None]
+        xf = x_sorted.astype(jnp.float32)
+        up = xf @ params["w_up"][ei].astype(jnp.float32)
+        if activation == "swiglu":
+            gate = xf @ params["w_gate"][ei].astype(jnp.float32)
+            h = jax.nn.silu(gate) * up
+        else:
+            h = jax.nn.gelu(up)
+        o = h @ params["w_down"][ei].astype(jnp.float32)
+        out = jnp.where(sel, o, out)
+    return out.astype(x_sorted.dtype)

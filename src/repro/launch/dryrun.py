@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization.  REPRO_DRYRUN_DEVICES overrides for fast
+# shakeout runs (still before jax import).
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config          # noqa: E402
+from repro.core.arch import LM_SHAPES, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.specs import build_cell, to_shardings  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# Collective-traffic extraction from post-SPMD HLO (per-device shapes).
+# Operand bytes per op kind (brief: "sum operand sizes"):
+#   all-reduce / all-to-all / collective-permute: operand == result size
+#   all-gather:     operand = result / group_size
+#   reduce-scatter: operand = result * group_size
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(?P<shape>[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)\b")
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*"
+                            r"\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"\bwhile\(.*condition=%?([\w\.\-]+),\s*"
+                       r"body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1.0
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(hlo_text: str):
+    """Segment HLO text into {computation_name: [lines]}; 'ENTRY' marked."""
+    comps, cur, name, entry = {}, [], None, None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_START_RE.match(line)
+        if m and not line.startswith(" "):
+            name = m.group(2)
+            if m.group(1):
+                entry = name
+            comps[name] = cur = []
+        elif name is not None:
+            cur.append(stripped)
+    return comps, entry
+
+
+def _line_collective(line):
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    op = m.group("op")
+    shapes = _TUPLE_SHAPE_RE.findall(line.split(" " + op, 1)[0])
+    size = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+    gm = _GROUP_RE.search(line)
+    group = len(gm.group(1).split(",")) if gm else 1
+    if op == "all-gather":
+        size = size / max(group, 1)           # operand = result / group
+    elif op == "reduce-scatter":
+        size = size * max(group, 1)           # operand = result * group
+    return op, size
+
+
+def collective_bytes(hlo_text: str):
+    """Per-device collective operand bytes with while-loop trip-count
+    accounting: a scan's per-layer collectives are multiplied by the
+    loop's trip count (parsed from the loop condition's constant), and
+    nesting (microbatch scan over layer scan) composes multiplicatively.
+    """
+    comps, entry = _split_computations(hlo_text)
+    # per-computation raw collective totals + while edges
+    raw = {}
+    edges = {}          # comp -> list[(body, trip)]
+    for name, lines in comps.items():
+        totals = {}
+        whiles = []
+        for line in lines:
+            lc = _line_collective(line)
+            if lc:
+                totals[lc[0]] = totals.get(lc[0], 0.0) + lc[1]
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                consts = [int(c) for c in
+                          _CONST_RE.findall("\n".join(comps.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                whiles.append((body, max(trip, 1)))
+        raw[name] = totals
+        edges[name] = whiles
+
+    # propagate execution multipliers from ENTRY through while nesting
+    mult = dict.fromkeys(comps, 0.0)
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return ({k: 0.0 for k in ("all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute")}, {})
+    mult[entry] = 1.0
+    frontier = [entry]
+    seen = set()
+    while frontier:
+        c = frontier.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        for body, trip in edges.get(c, []):
+            if body in mult:
+                mult[body] += mult[c] * trip
+                frontier.append(body)
+
+    totals = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+              "all-to-all": 0.0, "collective-permute": 0.0}
+    counts = dict.fromkeys(totals, 0)
+    for name, t in raw.items():
+        m = mult.get(name, 0.0) or (1.0 if name == entry else 0.0)
+        # collectives in computations never reached from entry (e.g. called
+        # subcomputations we did not model) count once
+        if m == 0.0 and t:
+            m = 1.0
+        for op, size in t.items():
+            totals[op] += size * m
+            counts[op] += 1
+    return totals, counts
+
+
+# ---------------------------------------------------------------------------
+
+def arch_n_micro(arch: str) -> int:
+    # larger accumulation for the biggest models bounds live activations
+    return {"mixtral_8x22b": 8, "phi3_medium_14b": 8}.get(arch, 4)
+
+
+def run_cell(arch: str, shape, multi_pod: bool, out_dir: str,
+             decode_positions: int = 1, force: bool = False,
+             n_micro_override=None, tag: str = "", variant: str = "baseline"):
+    mesh_name = "multipod" if multi_pod else "singlepod"
+    if variant != "baseline" and not tag:
+        tag = f"__{variant}"
+    cell_id = f"{arch}__{shape.name}__{mesh_name}{tag}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            print(f"[skip] {cell_id} (cached)")
+            return rec
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+           "mode": shape.mode}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(path, rec)
+        print(f"[skip] {cell_id}: {why}")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_micro = n_micro_override or arch_n_micro(arch)
+        fn, args, in_ps, out_ps = build_cell(
+            cfg, shape, mesh, n_micro=n_micro,
+            decode_positions=decode_positions, variant=variant)
+        jitted = jax.jit(fn, in_shardings=to_shardings(in_ps, mesh),
+                         out_shardings=to_shardings(out_ps, mesh))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        text = compiled.as_text()
+        coll, coll_counts = collective_bytes(text)
+        rec.update(
+            status="ok",
+            variant=variant,
+            decode_positions=decode_positions,
+            n_micro=n_micro,
+            n_devices=mesh.devices.size,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None) or (
+                    (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                    + (getattr(mem, "temp_size_in_bytes", 0) or 0)),
+            },
+            cost={
+                "flops": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+                "transcendentals": cost.get("transcendentals"),
+            },
+            collective_bytes=coll,
+            collective_counts=coll_counts,
+            params=cfg.param_count(),
+            params_active=cfg.param_count(active_only=True),
+        )
+        print(f"[ok]   {cell_id}  compile={t_compile:.0f}s "
+              f"flops={cost.get('flops', 0):.3g} "
+              f"peak={rec['memory']['peak_bytes']}")
+    except Exception as e:                                  # noqa: BLE001
+        rec.update(status="error", error=str(e)[:2000],
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[FAIL] {cell_id}: {e}")
+    rec["wall_s"] = round(time.time() - t0, 1)
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--decode-positions", type=int, default=1)
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = (LM_SHAPES if args.shape == "all"
+              else [s for s in LM_SHAPES if s.name == args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               decode_positions=args.decode_positions,
+                               force=args.force, variant=args.variant)
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_fail += s == "error"
+                n_skip += s == "skipped"
+    print(f"\ndone: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Production meshes.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the 512-placeholder-device dry run must set
+XLA_FLAGS before jax initializes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod:  2x16x16 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests."""
+    return jax.make_mesh((max(n_devices // model, 1), model),
+                         ("data", "model"))

@@ -1,0 +1,226 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — params/optimizer/cache
+structures come from jax.eval_shape over the real init functions, so the
+dry run lowers exactly the production step functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.arch import ArchConfig, ShapeSpec
+from repro.core.granularity import round_up
+from repro.dist.sharding import (batch_pspec, cache_pspecs, mesh_axes,
+                                 opt_pspecs, param_pspecs)
+from repro.models.transformer import forward, init_cache, init_model
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def params_abstract(cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(init_model, cfg=cfg), key)
+
+
+def opt_abstract(params_sds):
+    return jax.eval_shape(init_opt_state, params_sds)
+
+
+def cache_abstract(cfg: ArchConfig, batch: int, max_len: int,
+                   swa_ring: bool = False):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_len,
+                          swa_ring=swa_ring))
+
+
+def _dp_axes(mesh: Mesh):
+    fsdp, _ = mesh_axes(mesh)
+    return fsdp if isinstance(fsdp, tuple) else (fsdp,)
+
+
+def _batch_like_pspec(mesh: Mesh, b: int, extra_dims: int) -> P:
+    bdim = batch_pspec(mesh, b)[0]   # tokens spec is (bdim, None)
+    return P(bdim, *([None] * extra_dims))
+
+
+# ===========================================================================
+# Cell builders: each returns (fn, args, in_pspecs, out_pspecs)
+# ===========================================================================
+
+REMAT_FRACTION_OPT = {
+    # perf iteration #3: dense trainers afford saving layers outright
+    "phi3-medium-14b": 0.25, "stablelm-3b": 0.5, "starcoder2-3b": 0.5,
+    "phi-3-vision-4.2b": 0.5, "minicpm3-4b": 0.5,
+}
+
+# perf iteration (zamba2): sub-2B models replicate and train pure-DP over
+# all 256 chips — no per-layer TP collectives at all, grads all-reduce once.
+DP_ONLY_OPT = {"zamba2-1.2b", "whisper-tiny"}
+
+
+def _opt_policy(cfg: ArchConfig) -> str:
+    if cfg.name in DP_ONLY_OPT:
+        return "dp_only"
+    # MoE under TP-only forces per-layer (tokens, d_model) psum combines
+    # after the f-sharded expert GEMMs — measured 4x collective REGRESSION
+    # on granite (EXPERIMENTS.md §Perf iteration log); keep 2D FSDP there.
+    if cfg.ffn.kind == "moe":
+        return "fsdp"
+    return "auto"
+
+
+def train_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               n_micro: int = 4, remat=True, variant: str = "baseline"):
+    dp_only = variant == "opt" and _opt_policy(cfg) == "dp_only"
+    if variant == "opt":
+        remat = REMAT_FRACTION_OPT.get(cfg.name, 1.0)
+    if dp_only:
+        n_micro = 1            # full batch spreads over all 256 chips
+    mb = shape.global_batch // n_micro
+    assert shape.global_batch % n_micro == 0
+    lead = () if n_micro == 1 else (n_micro,)
+    lead_ps = () if n_micro == 1 else (None,)
+    tokens = SDS((*lead, mb, shape.seq_len), jnp.int32)
+    batch: Dict[str, Any] = {"tokens": tokens}
+    bp = batch_pspec(mesh, mb, include_model=dp_only)
+    batch_ps: Dict[str, Any] = {"tokens": P(*lead_ps, *bp)}
+    if cfg.family == "vlm":
+        batch["embeds"] = SDS((*lead, mb, shape.seq_len, cfg.d_model),
+                              jnp.bfloat16)
+        batch_ps["embeds"] = P(*lead_ps, *bp, None)
+    if cfg.encoder is not None:
+        batch["frames"] = SDS((*lead, mb, cfg.encoder.n_frames,
+                               cfg.d_model), jnp.bfloat16)
+        batch_ps["frames"] = P(*lead_ps, *bp, None)
+
+    params = params_abstract(cfg)
+    opt = opt_abstract(params)
+    policy = _opt_policy(cfg) if variant == "opt" else "fsdp"
+    p_ps = param_pspecs(params, mesh, policy=policy)
+    o_ps = (opt_pspecs(opt, p_ps, mesh) if variant == "opt"
+            else opt_pspecs(opt, p_ps))
+    opt_cfg = AdamWConfig()
+    fn = make_train_step(cfg, opt_cfg, n_micro=n_micro, remat=remat)
+    args = (params, opt, batch)
+    in_ps = (p_ps, o_ps, batch_ps)
+    out_ps = (p_ps, o_ps, None)
+    return fn, args, in_ps, out_ps
+
+
+def prefill_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                 variant: str = "baseline"):
+    b, s = shape.global_batch, shape.seq_len
+    buf = round_up(s, 256) if variant == "opt" else s
+    tokens = SDS((b, s), jnp.int32)
+    cache = cache_abstract(cfg, b, buf)
+    inputs: Dict[str, Any] = {"tokens": tokens}
+    in_extra_ps: Dict[str, Any] = {"tokens": batch_pspec(mesh, b)}
+    if cfg.family == "vlm":
+        inputs = {"embeds": SDS((b, s, cfg.d_model), jnp.bfloat16),
+                  "tokens": tokens}
+        in_extra_ps["embeds"] = _batch_like_pspec(mesh, b, 2)
+    if cfg.encoder is not None:
+        inputs["frames"] = SDS((b, cfg.encoder.n_frames, cfg.d_model),
+                               jnp.bfloat16)
+        in_extra_ps["frames"] = _batch_like_pspec(mesh, b, 2)
+
+    def fn(params, inp, cache):
+        if "embeds" in inp:
+            fwd_in = {"embeds": inp["embeds"]}
+        else:
+            fwd_in = {"tokens": inp["tokens"]}
+        if "frames" in inp:
+            fwd_in["frames"] = inp["frames"]
+        logits, new_cache, _ = forward(params, cfg, fwd_in, mode="prefill",
+                                       cache=cache, cache_len=0)
+        return logits[:, -1], new_cache
+
+    params = params_abstract(cfg)
+    # dp_only is a TRAIN mapping (grads all-reduce once); for prefill the
+    # replicated-weights layout measured a 46x collective regression on
+    # zamba2 — use the auto (tp/fsdp) policy here.
+    policy = ("auto" if _opt_policy(cfg) == "dp_only" else _opt_policy(cfg))         if variant == "opt" else "fsdp"
+    # prefill keeps head-mode cache: seq-sharding the cache during prefill
+    # costs one full-KV reshard (measured +78 GB on granite) — in serving
+    # that reshard happens ONCE per request at the prefill->decode
+    # transition and amortizes over the decode phase (EXPERIMENTS §Perf).
+    cmode = "head"
+    p_ps = param_pspecs(params, mesh, policy=policy)
+    c_ps = cache_pspecs(cache, mesh, b, mode=cmode)
+    args = (params, inputs, cache)
+    in_ps = (p_ps, in_extra_ps, c_ps)
+    out_ps = (None, c_ps)
+    return fn, args, in_ps, out_ps
+
+
+def decode_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+                n_positions: int = 1, variant: str = "baseline"):
+    """serve_step: n_positions new tokens against a cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    max_len = s + n_positions
+    swa_ring = (variant == "opt" and cfg.attention is not None
+                and cfg.attention.kind == "swa")
+    if variant == "opt":
+        # sequence-sharded cache needs a tp-divisible buffer
+        max_len = round_up(max_len, 256)
+    tokens = SDS((b, n_positions), jnp.int32)
+    cache = cache_abstract(cfg, b, max_len, swa_ring=swa_ring)
+    cache_len = SDS((), jnp.int32)
+    inputs: Dict[str, Any] = {"tokens": tokens}
+    in_extra_ps: Dict[str, Any] = {"tokens": batch_pspec(mesh, b)}
+    if cfg.family == "vlm":
+        inputs = {"embeds": SDS((b, n_positions, cfg.d_model), jnp.bfloat16),
+                  "tokens": tokens}
+        in_extra_ps["embeds"] = _batch_like_pspec(mesh, b, 2)
+    if cfg.encoder is not None:
+        inputs["frames"] = SDS((b, cfg.encoder.n_frames, cfg.d_model),
+                               jnp.bfloat16)
+        in_extra_ps["frames"] = _batch_like_pspec(mesh, b, 2)
+
+    def fn(params, inp, cache, cache_len):
+        if "embeds" in inp:
+            fwd_in = {"embeds": inp["embeds"]}
+        else:
+            fwd_in = {"tokens": inp["tokens"]}
+        if "frames" in inp:
+            fwd_in["frames"] = inp["frames"]
+        logits, new_cache, _ = forward(params, cfg, fwd_in, mode="decode",
+                                       cache=cache, cache_len=cache_len,
+                                       swa_ring=swa_ring)
+        return logits, new_cache
+
+    params = params_abstract(cfg)
+    policy = _opt_policy(cfg) if variant == "opt" else "fsdp"
+    cmode = "seq" if variant == "opt" else "head"
+    p_ps = param_pspecs(params, mesh, policy=policy)
+    c_ps = cache_pspecs(cache, mesh, b, mode=cmode)
+    args = (params, inputs, cache, cache_len)
+    in_ps = (p_ps, in_extra_ps, c_ps, P())
+    out_ps = (None, c_ps)
+    return fn, args, in_ps, out_ps
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               n_micro: int = 4, decode_positions: int = 1,
+               variant: str = "baseline"):
+    if shape.mode == "train":
+        return train_cell(cfg, shape, mesh, n_micro=n_micro,
+                          variant=variant)
+    if shape.mode == "prefill":
+        return prefill_cell(cfg, shape, mesh, variant=variant)
+    return decode_cell(cfg, shape, mesh, n_positions=decode_positions,
+                       variant=variant)
+
+
+def to_shardings(pspecs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else
+        (None if s is None else NamedSharding(mesh, P())),
+        pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)

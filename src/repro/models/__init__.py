@@ -1,0 +1,14 @@
+"""repro.models — composable model zoo (all 10 assigned architectures)."""
+from repro.models.attention import (attention_decode, attention_full,
+                                    init_attention, init_kv_cache)
+from repro.models.layers import (embed, init_embedding, init_mlp,
+                                 init_rmsnorm, lm_head, mlp, rmsnorm,
+                                 softmax_cross_entropy)
+from repro.models.mamba import (init_mamba1, init_mamba1_state, init_mamba2,
+                                init_mamba2_state, mamba1_block, mamba2_block)
+from repro.models.moe import (balanced_routing, init_moe, moe_ffn,
+                              skewed_routing)
+from repro.models.transformer import (encode, forward, init_cache,
+                                      init_model, make_segments)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,329 @@
+"""Attention variants: GQA (covers MHA/MQA), sliding-window GQA, and MLA.
+
+Three execution modes:
+  - "full":   self-attention over the whole sequence (train / prefill).
+  - "decode": multi-position decode forward — the paper's Eq. 2: N new
+              positions attend to a pre-filled KV cache + each other.
+  - "cross":  encoder-decoder cross attention (whisper).
+
+The decode path can route the attention core through the Pallas
+query-tiled kernel (``repro.kernels.decode_attention``) whose q-block IS
+the M_attn granularity of the NFP principle; the default XLA path is the
+semantically identical reference.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import AttentionSpec
+from repro.models.layers import _init, apply_rope, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def init_attention(key, d_model: int, a: AttentionSpec, dtype=jnp.bfloat16) -> Dict:
+    ks = jax.random.split(key, 8)
+    if a.kind == "mla":
+        qk_h = a.qk_nope_head_dim + a.qk_rope_head_dim
+        return {
+            "wq_a": _init(ks[0], (d_model, a.q_lora_rank), dtype=dtype),
+            "q_norm": init_rmsnorm(a.q_lora_rank, dtype),
+            "wq_b": _init(ks[1], (a.q_lora_rank, a.n_heads * qk_h), dtype=dtype),
+            "wkv_a": _init(ks[2], (d_model, a.kv_lora_rank + a.qk_rope_head_dim),
+                           dtype=dtype),
+            "kv_norm": init_rmsnorm(a.kv_lora_rank, dtype),
+            "wkv_b": _init(ks[3], (a.kv_lora_rank,
+                                   a.n_heads * (a.qk_nope_head_dim + a.v_head_dim)),
+                           dtype=dtype),
+            "wo": _init(ks[4], (a.n_heads * a.v_head_dim, d_model), dtype=dtype),
+        }
+    return {
+        "wq": _init(ks[0], (d_model, a.n_heads * a.head_dim), dtype=dtype),
+        "wk": _init(ks[1], (d_model, a.n_kv_heads * a.head_dim), dtype=dtype),
+        "wv": _init(ks[2], (d_model, a.n_kv_heads * a.head_dim), dtype=dtype),
+        "wo": _init(ks[3], (a.n_heads * a.head_dim, d_model), dtype=dtype),
+    }
+
+
+def init_kv_cache(batch: int, max_len: int, a: AttentionSpec,
+                  dtype=jnp.bfloat16) -> Dict:
+    """Pre-allocated decode cache (paper App. C.1.3 discipline)."""
+    if a.kind == "mla":
+        return {
+            "latent": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, a.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, a.n_kv_heads, a.head_dim), dtype),
+    }
+
+
+# ===========================================================================
+# Attention cores
+# ===========================================================================
+
+def _gqa_core(q: Array, k: Array, v: Array, mask: Array, scale: float) -> Array:
+    """q: (b,sq,h,dh)  k/v: (b,sk,kv,dh)  mask: (b,sq,sk) bool -> (b,sq,h,dh).
+
+    Grouped without materializing repeated KV heads.
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return ctx.reshape(b, sq, h, dh)
+
+
+def _causal_mask(q_pos: Array, kv_pos: Array,
+                 window: Optional[int] = None,
+                 kv_valid: Optional[Array] = None) -> Array:
+    """q_pos: (b,sq) kv_pos: (b,sk) -> (b,sq,sk) bool."""
+    m = kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        m &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if kv_valid is not None:
+        m &= kv_valid[:, None, :]
+    return m
+
+
+# ===========================================================================
+# GQA / SWA
+# ===========================================================================
+
+def gqa_full(params, a: AttentionSpec, x: Array, positions: Array,
+             theta: float, build_cache: Optional[Dict] = None,
+             cache_len: int = 0, causal: bool = True,
+             ) -> Tuple[Array, Optional[Dict]]:
+    """Self-attention over x (train / prefill).  Optionally fills a cache."""
+    b, s, d = x.shape
+    q = (x @ params["wq"]).reshape(b, s, a.n_heads, a.head_dim)
+    k = (x @ params["wk"]).reshape(b, s, a.n_kv_heads, a.head_dim)
+    v = (x @ params["wv"]).reshape(b, s, a.n_kv_heads, a.head_dim)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    window = a.window if a.kind == "swa" else None
+    if causal:
+        mask = _causal_mask(positions, positions, window)
+    else:
+        mask = jnp.ones((b, s, s), bool)
+    scale = 1.0 / (a.head_dim ** 0.5)
+    ctx = _gqa_core(q, k, v, mask, scale)
+    out = ctx.reshape(b, s, -1) @ params["wo"]
+    new_cache = None
+    if build_cache is not None:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                build_cache["k"], k, (0, cache_len, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                build_cache["v"], v, (0, cache_len, 0, 0)),
+        }
+    return out, new_cache
+
+
+def gqa_decode(params, a: AttentionSpec, x: Array, cache: Dict,
+               cache_len, theta: float,
+               use_kernel: bool = False) -> Tuple[Array, Dict]:
+    """Multi-position decode forward: N new positions vs cache (Eq. 2)."""
+    b, n, d = x.shape
+    s_max = cache["k"].shape[1]
+    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)[None, :]          # (1,n)
+    q_pos = jnp.broadcast_to(q_pos, (b, n))
+    q = (x @ params["wq"]).reshape(b, n, a.n_heads, a.head_dim)
+    k = (x @ params["wk"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    v = (x @ params["wv"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    q = apply_rope(q, q_pos, theta)
+    k = apply_rope(k, q_pos, theta)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_len, 0, 0))
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None, :],
+                              (b, s_max))
+    window = a.window if a.kind == "swa" else None
+    scale = 1.0 / (a.head_dim ** 0.5)
+    if use_kernel:
+        from repro.kernels.decode_attention.ops import decode_attention
+        ctx = decode_attention(q, k_cache, v_cache, cache_len + n,
+                               window=window)
+    else:
+        mask = _causal_mask(q_pos, kv_pos, window)
+        ctx = _gqa_core(q, k_cache, v_cache, mask, scale)
+    out = ctx.reshape(b, n, -1) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_decode_ring(params, a: AttentionSpec, x: Array, cache: Dict,
+                    cache_len, theta: float) -> Tuple[Array, Dict]:
+    """Sliding-window decode over a RING buffer of size W_buf >= window+N.
+
+    Global position p lives in slot p % W_buf; the slot's current content
+    is the LARGEST written position congruent to the slot index, which is
+    computable from (slot, total_written) without storing positions:
+        p_s = s + W_buf * ((L_tot - 1 - s) // W_buf)   if L_tot > 0.
+    Memory: O(window) instead of O(sequence) — 128x smaller for
+    mixtral long_500k (window 4096 vs 524k cache).
+    """
+    b, n, d = x.shape
+    w_buf = cache["k"].shape[1]
+    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)[None, :]
+    q_pos = jnp.broadcast_to(q_pos, (b, n))
+    q = (x @ params["wq"]).reshape(b, n, a.n_heads, a.head_dim)
+    k = (x @ params["wk"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    v = (x @ params["wv"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    q = apply_rope(q, q_pos, theta)
+    k = apply_rope(k, q_pos, theta)
+    slots = (cache_len + jnp.arange(n, dtype=jnp.int32)) % w_buf
+    k_cache = cache["k"].at[:, slots].set(k)
+    v_cache = cache["v"].at[:, slots].set(v)
+    # position currently stored in each slot (after the writes above)
+    l_tot = cache_len + n
+    s_idx = jnp.arange(w_buf, dtype=jnp.int32)
+    p_s = s_idx + w_buf * ((l_tot - 1 - s_idx) // w_buf)
+    p_s = jnp.where(l_tot > 0, p_s, -1)
+    kv_pos = jnp.broadcast_to(p_s[None, :], (b, w_buf))
+    window = a.window or w_buf
+    mask = _causal_mask(q_pos, kv_pos, window,
+                        kv_valid=kv_pos >= 0)
+    scale = 1.0 / (a.head_dim ** 0.5)
+    ctx = _gqa_core(q, k_cache, v_cache, mask, scale)
+    out = ctx.reshape(b, n, -1) @ params["wo"]
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention(params, a: AttentionSpec, x: Array,
+                    enc_k: Array, enc_v: Array) -> Array:
+    """Whisper decoder cross-attn: kv precomputed from encoder memory."""
+    b, n, d = x.shape
+    q = (x @ params["wq"]).reshape(b, n, a.n_heads, a.head_dim)
+    mask = jnp.ones((b, n, enc_k.shape[1]), bool)
+    scale = 1.0 / (a.head_dim ** 0.5)
+    ctx = _gqa_core(q, enc_k, enc_v, mask, scale)
+    return ctx.reshape(b, n, -1) @ params["wo"]
+
+
+def encode_cross_kv(params, a: AttentionSpec, memory: Array) -> Tuple[Array, Array]:
+    b, s, d = memory.shape
+    k = (memory @ params["wk"]).reshape(b, s, a.n_kv_heads, a.head_dim)
+    v = (memory @ params["wv"]).reshape(b, s, a.n_kv_heads, a.head_dim)
+    return k, v
+
+
+# ===========================================================================
+# MLA (MiniCPM3 / DeepSeek-style multi-head latent attention)
+# ===========================================================================
+
+def _mla_q(params, a: AttentionSpec, x: Array, q_pos: Array, theta: float):
+    b, n, _ = x.shape
+    qk_h = a.qk_nope_head_dim + a.qk_rope_head_dim
+    q = rmsnorm(params["q_norm"], x @ params["wq_a"]) @ params["wq_b"]
+    q = q.reshape(b, n, a.n_heads, qk_h)
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., a.qk_nope_head_dim:], q_pos, theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, a: AttentionSpec, x: Array, pos: Array, theta: float):
+    kv = x @ params["wkv_a"]
+    latent = rmsnorm(params["kv_norm"], kv[..., : a.kv_lora_rank])
+    k_rope = kv[..., a.kv_lora_rank:]
+    # shared-rope key: rotate as a single "head"
+    k_rope = apply_rope(k_rope[..., None, :], pos, theta)[..., 0, :]
+    return latent, k_rope
+
+
+def mla_full(params, a: AttentionSpec, x: Array, positions: Array,
+             theta: float, build_cache: Optional[Dict] = None,
+             cache_len: int = 0) -> Tuple[Array, Optional[Dict]]:
+    """Non-absorbed MLA for train/prefill: decompress K/V and run GQA-style."""
+    b, s, _ = x.shape
+    q_nope, q_rope = _mla_q(params, a, x, positions, theta)
+    latent, k_rope = _mla_latent(params, a, x, positions, theta)
+    wkv_b = params["wkv_b"].reshape(a.kv_lora_rank, a.n_heads,
+                                    a.qk_nope_head_dim + a.v_head_dim)
+    kv = jnp.einsum("bsl,lhd->bshd", latent, wkv_b)
+    k_nope = kv[..., : a.qk_nope_head_dim]
+    v = kv[..., a.qk_nope_head_dim:]
+    scale = 1.0 / ((a.qk_nope_head_dim + a.qk_rope_head_dim) ** 0.5)
+    mask = _causal_mask(positions, positions)
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+    scores = scores.astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    out = ctx.reshape(b, s, -1) @ params["wo"]
+    new_cache = None
+    if build_cache is not None:
+        new_cache = {
+            "latent": jax.lax.dynamic_update_slice(
+                build_cache["latent"], latent, (0, cache_len, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(
+                build_cache["k_rope"], k_rope, (0, cache_len, 0)),
+        }
+    return out, new_cache
+
+
+def mla_decode(params, a: AttentionSpec, x: Array, cache: Dict,
+               cache_len, theta: float) -> Tuple[Array, Dict]:
+    """Absorbed MLA decode: scores computed directly against the latent
+    cache (KV traffic = latent bytes — the d_latent term in the NFP model)."""
+    b, n, _ = x.shape
+    s_max = cache["latent"].shape[1]
+    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)[None, :]
+    q_pos = jnp.broadcast_to(q_pos, (b, n))
+    q_nope, q_rope = _mla_q(params, a, x, q_pos, theta)
+    latent_new, k_rope_new = _mla_latent(params, a, x, q_pos, theta)
+    latent = jax.lax.dynamic_update_slice(cache["latent"], latent_new,
+                                          (0, cache_len, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
+                                          (0, cache_len, 0))
+    wkv_b = params["wkv_b"].reshape(a.kv_lora_rank, a.n_heads,
+                                    a.qk_nope_head_dim + a.v_head_dim)
+    wk = wkv_b[..., : a.qk_nope_head_dim]           # (lora, h, d_nope)
+    wv = wkv_b[..., a.qk_nope_head_dim:]            # (lora, h, d_v)
+    # absorb the key decompression into the query
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk)
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_lat, latent)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+    scale = 1.0 / ((a.qk_nope_head_dim + a.qk_rope_head_dim) ** 0.5)
+    kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None, :],
+                              (b, s_max))
+    mask = _causal_mask(q_pos, kv_pos)
+    scores = jnp.where(mask[:, None, :, :], scores.astype(jnp.float32) * scale,
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", probs, latent)
+    ctx = jnp.einsum("bqhl,lhd->bqhd", ctx_lat, wv)
+    out = ctx.reshape(b, n, -1) @ params["wo"]
+    return out, {"latent": latent, "k_rope": k_rope}
+
+
+# ===========================================================================
+# Dispatch
+# ===========================================================================
+
+def attention_full(params, a: AttentionSpec, x, positions, theta,
+                   build_cache=None, cache_len: int = 0, causal: bool = True):
+    if a.kind == "mla":
+        return mla_full(params, a, x, positions, theta, build_cache, cache_len)
+    return gqa_full(params, a, x, positions, theta, build_cache, cache_len,
+                    causal)
+
+
+def attention_decode(params, a: AttentionSpec, x, cache, cache_len, theta,
+                     use_kernel: bool = False, swa_ring: bool = False):
+    if a.kind == "mla":
+        return mla_decode(params, a, x, cache, cache_len, theta)
+    if swa_ring and a.kind == "swa":
+        return gqa_decode_ring(params, a, x, cache, cache_len, theta)
+    return gqa_decode(params, a, x, cache, cache_len, theta, use_kernel)

@@ -1,0 +1,134 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings.
+
+Pure-JAX parameter pytrees (dicts) + apply functions.  bf16 weights,
+f32 normalization/softmax internals (matches the s=2 traffic assumption
+of the NFP model).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _init(key, shape, scale=None, dtype=jnp.bfloat16):
+    if scale is None:
+        scale = 1.0 / (shape[0] ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., s, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., s, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str = "swiglu",
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"up": _init(ks[0], (d_model, d_ff), dtype=dtype),
+         "down": _init(ks[1], (d_ff, d_model), dtype=dtype)}
+    if activation == "swiglu":
+        p["gate"] = _init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params, x: Array, activation: str = "swiglu") -> Array:
+    up = x @ params["up"]
+    if activation == "swiglu":
+        gate = jax.nn.silu((x @ params["gate"]).astype(jnp.float32))
+        h = (gate * up.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16):
+    return {"table": _init(key, (vocab, d_model), scale=0.02, dtype=dtype)}
+
+
+def embed(params, tokens: Array) -> Array:
+    return params["table"][tokens]
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype=jnp.bfloat16):
+    return {"w": _init(key, (d_model, vocab), dtype=dtype)}
+
+
+def lm_head(params, x: Array) -> Array:
+    return x @ params["w"]
+
+
+def unembed_tied(embed_params, x: Array) -> Array:
+    return x @ embed_params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: Array, labels: Array,
+                          mask: Optional[Array] = None) -> Array:
+    """Mean next-token CE; logits (b, s, v), labels (b, s) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

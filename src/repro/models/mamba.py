@@ -1,0 +1,239 @@
+"""Mamba1 (falcon-mamba) and Mamba2 (zamba2) state-space blocks.
+
+Both support:
+  - "full" mode: scan over the whole sequence (train / prefill),
+  - "decode" mode: N new positions advancing a cached (conv, ssm) state —
+    the SSM analogue of the multi-position decode forward.  The Pallas
+    chunked-scan kernel (``repro.kernels.mamba_scan``) processes positions
+    in SSM_CHUNK blocks — the scan-chunk granularity term of DESIGN.md §6.
+
+Projections are stored UNPACKED (in_x / in_z / in_B / ...) rather than as
+one fused in_proj: each matrix then has a clean tensor-parallel
+PartitionSpec (d_inner sharded over the model axis) with no mid-tensor
+splits — the per-channel recurrence and depthwise conv stay fully local
+under TP, and only out_proj reduces over the sharded dim (one psum),
+megatron-style.  State dtype is f32; activations bf16.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import SSMSpec
+from repro.models.layers import _init, rmsnorm
+
+Array = jax.Array
+
+
+# ===========================================================================
+# Depthwise causal conv1d
+# ===========================================================================
+
+def causal_conv1d(x: Array, w: Array, b: Array,
+                  conv_state: Optional[Array] = None,
+                  ) -> Tuple[Array, Array]:
+    """x: (batch, s, c); w: (d_conv, c); returns (out (batch,s,c), new_state).
+
+    conv_state: (batch, d_conv-1, c) trailing inputs from previous steps.
+    Depthwise == per-channel, so channel sharding keeps it collective-free.
+    """
+    d_conv = w.shape[0]
+    batch, s, c = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((batch, d_conv - 1, c), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros((batch, s, c), jnp.float32)
+    for j in range(d_conv):
+        out = out + xp[:, j:j + s].astype(jnp.float32) * w[j].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = xp[:, -(d_conv - 1):] if d_conv > 1 else conv_state
+    return jax.nn.silu(out).astype(x.dtype), new_state
+
+
+# ===========================================================================
+# Mamba1
+# ===========================================================================
+
+def init_mamba1(key, d_model: int, s: SSMSpec, dtype=jnp.bfloat16) -> Dict:
+    di = s.d_inner(d_model)
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_x": _init(ks[0], (d_model, di), dtype=dtype),
+        "in_z": _init(ks[1], (d_model, di), dtype=dtype),
+        "conv_w": _init(ks[2], (s.d_conv, di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[3], (di, dt_rank + 2 * s.d_state), dtype=dtype),
+        "dt_proj": _init(ks[4], (dt_rank, di), dtype=dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None, :],
+            (di, s.d_state)) + 0.0),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[5], (di, d_model), dtype=dtype),
+    }
+
+
+def init_mamba1_state(batch: int, d_model: int, s: SSMSpec) -> Dict:
+    di = s.d_inner(d_model)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }
+
+
+def _mamba1_scan(xs: Array, dts: Array, bs_: Array, cs: Array, a: Array,
+                 h0: Array) -> Tuple[Array, Array]:
+    """xs,dts: (b,s,di); bs_,cs: (b,s,ds); a: (di,ds); h0: (b,di,ds)."""
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])                # (b,di,ds)
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    dts_t = jnp.moveaxis(dts, 1, 0)
+    bs_t = jnp.moveaxis(bs_, 1, 0)
+    cs_t = jnp.moveaxis(cs, 1, 0)
+    h, ys = jax.lax.scan(step, h0, (xs_t, dts_t, bs_t, cs_t))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def mamba1_block(params, s: SSMSpec, x: Array,
+                 state: Optional[Dict] = None,
+                 use_kernel: bool = False) -> Tuple[Array, Optional[Dict]]:
+    """x: (batch, seq, d_model) -> (out, new_state)."""
+    batch, seq, d_model = x.shape
+    di = s.d_inner(d_model)
+    dt_rank = max(1, d_model // 16)
+    x_in = x @ params["in_x"]
+    z = x @ params["in_z"]
+    conv_state = state["conv"] if state is not None else None
+    x_conv, new_conv = causal_conv1d(x_in, params["conv_w"], params["conv_b"],
+                                     conv_state)
+    proj = x_conv @ params["x_proj"]
+    dt = proj[..., :dt_rank] @ params["dt_proj"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    b_ssm = proj[..., dt_rank:dt_rank + s.d_state].astype(jnp.float32)
+    c_ssm = proj[..., dt_rank + s.d_state:].astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((batch, di, s.d_state), jnp.float32))
+    if use_kernel:
+        from repro.kernels.mamba_scan.ops import selective_scan
+        ys, h = selective_scan(x_conv.astype(jnp.float32), dt, b_ssm, c_ssm,
+                               a, h0)
+    else:
+        ys, h = _mamba1_scan(x_conv.astype(jnp.float32), dt, b_ssm, c_ssm,
+                             a, h0)
+    y = ys + params["D"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    new_state = {"conv": new_conv, "ssm": h} if state is not None else None
+    return out, new_state
+
+
+# ===========================================================================
+# Mamba2 (scalar per-head decay; SSD recurrence form)
+# ===========================================================================
+
+def init_mamba2(key, d_model: int, s: SSMSpec, dtype=jnp.bfloat16) -> Dict:
+    di = s.d_inner(d_model)
+    nh = di // s.head_dim
+    ng = s.n_groups
+    ks = jax.random.split(key, 10)
+    return {
+        "in_x": _init(ks[0], (d_model, di), dtype=dtype),
+        "in_z": _init(ks[1], (d_model, di), dtype=dtype),
+        "in_B": _init(ks[2], (d_model, ng * s.d_state), dtype=dtype),
+        "in_C": _init(ks[3], (d_model, ng * s.d_state), dtype=dtype),
+        "in_dt": _init(ks[4], (d_model, nh), dtype=dtype),
+        "conv_w": _init(ks[5], (s.d_conv, di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "convB_w": _init(ks[6], (s.d_conv, ng * s.d_state), scale=0.5,
+                         dtype=dtype),
+        "convB_b": jnp.zeros((ng * s.d_state,), dtype),
+        "convC_w": _init(ks[7], (s.d_conv, ng * s.d_state), scale=0.5,
+                         dtype=dtype),
+        "convC_b": jnp.zeros((ng * s.d_state,), dtype),
+        "A_logh": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": _init(ks[8], (di, d_model), dtype=dtype),
+    }
+
+
+def init_mamba2_state(batch: int, d_model: int, s: SSMSpec) -> Dict:
+    di = s.d_inner(d_model)
+    nh = di // s.head_dim
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+        "convB": jnp.zeros((batch, s.d_conv - 1, s.n_groups * s.d_state),
+                           jnp.bfloat16),
+        "convC": jnp.zeros((batch, s.d_conv - 1, s.n_groups * s.d_state),
+                           jnp.bfloat16),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_block(params, s: SSMSpec, x: Array,
+                 state: Optional[Dict] = None) -> Tuple[Array, Optional[Dict]]:
+    batch, seq, d_model = x.shape
+    di = s.d_inner(d_model)
+    nh = di // s.head_dim
+    ng = s.n_groups
+    ds = s.d_state
+    z = x @ params["in_z"]
+    x_in = x @ params["in_x"]
+    b_raw = x @ params["in_B"]
+    c_raw = x @ params["in_C"]
+    dt_raw = x @ params["in_dt"]
+    cs = state if state is not None else {}
+    x_conv, new_conv = causal_conv1d(x_in, params["conv_w"], params["conv_b"],
+                                     cs.get("conv"))
+    b_conv, new_convB = causal_conv1d(b_raw, params["convB_w"],
+                                      params["convB_b"], cs.get("convB"))
+    c_conv, new_convC = causal_conv1d(c_raw, params["convC_w"],
+                                      params["convC_b"], cs.get("convC"))
+    x_f = x_conv.astype(jnp.float32)
+    b_ssm = b_conv.reshape(batch, seq, ng, ds).astype(jnp.float32)
+    c_ssm = c_conv.reshape(batch, seq, ng, ds).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_logh"])                                 # (nh,)
+    xh = x_f.reshape(batch, seq, nh, s.head_dim)
+    rep = nh // ng
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp      # (b,nh,dh) (b,nh) (b,ng,ds) (b,ng,ds)
+        da = jnp.exp(dt_t * a)          # (b,nh)
+        b_h = jnp.repeat(b_t, rep, axis=1)   # (b,nh,ds)
+        c_h = jnp.repeat(c_t, rep, axis=1)
+        upd = (dt_t[..., None] * x_t)[..., None] * b_h[:, :, None, :]
+        h = da[..., None, None] * h + upd
+        y = jnp.einsum("bhds,bhs->bhd", h, c_h)
+        return h, y
+
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((batch, nh, s.head_dim, ds), jnp.float32))
+    xs_t = jnp.moveaxis(xh, 1, 0)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    b_t = jnp.moveaxis(b_ssm, 1, 0)
+    c_t = jnp.moveaxis(c_ssm, 1, 0)
+    h, ys = jax.lax.scan(step, h0, (xs_t, dt_t, b_t, c_t))
+    y = jnp.moveaxis(ys, 0, 1)                                # (b,s,nh,dh)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(batch, seq, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = rmsnorm(params["norm"], y)
+    out = y @ params["out_proj"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "convB": new_convB,
+                     "convC": new_convC, "ssm": h}
+    return out, new_state

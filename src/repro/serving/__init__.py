@@ -1,0 +1,8 @@
+"""repro.serving — multi-position decode engine + parallel-decoding drivers."""
+from repro.serving.diffusion import DiffusionBlockDecoder
+from repro.serving.engine import DecodeEngine
+from repro.serving.mtp import MTPDecoder, init_mtp_heads, mtp_loss
+from repro.serving.speculative import SpeculativeDecoder, ngram_draft
+
+__all__ = ["DecodeEngine", "SpeculativeDecoder", "DiffusionBlockDecoder",
+           "MTPDecoder", "init_mtp_heads", "mtp_loss", "ngram_draft"]

@@ -1,0 +1,116 @@
+"""Multi-position decode engine.
+
+The engine executes the paper's abstraction directly: a decode forward
+that processes N positions (Eq. 2) over a pre-allocated cache.  One
+compiled executable serves every step at a given N (cache_len is a traced
+scalar), matching the bucketed-compile discipline of TPU serving stacks.
+
+The NFP budget (core.parallelism_budget) tells algorithm drivers
+(speculative verification, diffusion block decode) how many positions are
+near-free for the current arch x hardware x batch x context.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.arch import ArchConfig
+from repro.core.granularity import GranularitySpec
+from repro.core.hardware import TPU_V5E, HardwareSpec
+from repro.core.nfp import parallelism_budget
+from repro.models.transformer import forward, init_cache
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def _prefill_fn(params, cfg: ArchConfig, tokens, cache, use_kernel=False):
+    logits, cache, _ = forward(params, cfg, {"tokens": tokens},
+                               mode="prefill", cache=cache, cache_len=0,
+                               use_kernel=use_kernel)
+    return logits, cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def _decode_fn(params, cfg: ArchConfig, tokens, cache, cache_len,
+               use_kernel=False):
+    logits, cache, _ = forward(params, cfg, {"tokens": tokens},
+                               mode="decode", cache=cache,
+                               cache_len=cache_len, use_kernel=use_kernel)
+    return logits, cache
+
+
+@dataclass
+class DecodeEngine:
+    cfg: ArchConfig
+    params: Dict
+    batch: int
+    max_len: int
+    hardware: HardwareSpec = TPU_V5E
+    use_kernel: bool = False
+    cache: Optional[Dict] = None
+    cache_len: Array = field(default_factory=lambda: jnp.zeros((), jnp.int32))
+
+    def __post_init__(self):
+        if self.cache is None:
+            self.cache = init_cache(self.cfg, self.batch, self.max_len)
+        self.gran = GranularitySpec.for_backend(
+            self.cfg.ffn.n_experts,
+            head_dim=(self.cfg.attention.head_dim if self.cfg.attention
+                      else 128))
+
+    # ------------------------------------------------------------------
+    def nfp_budget(self, eps: float = 0.2, routing: str = "balanced") -> int:
+        """Near-free position budget for the CURRENT state (Sec. 6)."""
+        ell = max(int(self.cache_len), 1)
+        return parallelism_budget(self.cfg, self.hardware, self.gran,
+                                  self.batch, ell, eps, routing)
+
+    # ------------------------------------------------------------------
+    def prefill(self, tokens: Array) -> Array:
+        """tokens: (b, prompt_len).  Returns last-position logits."""
+        logits, self.cache = _prefill_fn(self.params, self.cfg, tokens,
+                                         self.cache, self.use_kernel)
+        self.cache_len = jnp.asarray(tokens.shape[1], jnp.int32)
+        return logits[:, -1]
+
+    def decode_step(self, tokens: Array, advance: Optional[int] = None
+                    ) -> Array:
+        """One multi-position decode forward over N = tokens.shape[1]
+        positions.  ``advance`` = how many of the N positions to commit to
+        the cache (speculative decoding commits only accepted tokens);
+        default commits all N."""
+        logits, new_cache = _decode_fn(self.params, self.cfg, tokens,
+                                       self.cache, self.cache_len,
+                                       self.use_kernel)
+        n = tokens.shape[1]
+        adv = n if advance is None else advance
+        if adv > 0:
+            self.cache = new_cache
+            self.cache_len = self.cache_len + adv
+        return logits
+
+    def peek_step(self, tokens: Array) -> Tuple[Array, Dict]:
+        """Decode forward WITHOUT committing (verification forwards)."""
+        return _decode_fn(self.params, self.cfg, tokens, self.cache,
+                          self.cache_len, self.use_kernel)
+
+    def commit(self, new_cache: Dict, n_accepted) -> None:
+        self.cache = new_cache
+        self.cache_len = self.cache_len + n_accepted
+
+    # ------------------------------------------------------------------
+    def greedy_generate(self, prompt: Array, steps: int) -> Array:
+        """Plain autoregressive baseline (N=1 per forward)."""
+        logits = self.prefill(prompt)
+        last = jnp.argmax(logits, axis=-1)[:, None]
+        out = [last]
+        for _ in range(steps - 1):
+            logits = self.decode_step(last)
+            last = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            out.append(last)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,116 @@
+"""Speculative decoding driver — consumes the NFP position budget.
+
+The verification forward IS a multi-position decode forward (paper
+Sec. G.1: "the verification forward in speculative decoding ... shares
+the same multi-position decode paradigm").  The NFP principle supplies
+the system-side budget for the verification length gamma: pushing gamma
+past N_max(eps) buys tokens at super-linear latency cost.
+
+Two draft sources:
+  - ngram: suffix-match lookup in the already-generated context (free),
+  - draft engine: a second (smaller) DecodeEngine.
+Greedy acceptance keeps the output identical to AR greedy decoding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import DecodeEngine
+
+Array = jax.Array
+
+
+def ngram_draft(context: np.ndarray, gamma: int, max_order: int = 3,
+                vocab_size: int = 32000) -> np.ndarray:
+    """Suffix-match n-gram draft: find the longest recent suffix that
+    re-occurs earlier in the context and propose its continuation."""
+    out = []
+    ctx = list(context)
+    for _ in range(gamma):
+        prop = None
+        for order in range(min(max_order, len(ctx) - 1), 0, -1):
+            suffix = ctx[-order:]
+            for i in range(len(ctx) - order - 1, -1, -1):
+                if ctx[i:i + order] == suffix:
+                    prop = ctx[i + order]
+                    break
+            if prop is not None:
+                break
+        if prop is None:
+            prop = ctx[-1] if ctx else 0
+        out.append(int(prop) % vocab_size)
+        ctx.append(out[-1])
+    return np.asarray(out, np.int64)
+
+
+@dataclass
+class SpeculativeDecoder:
+    engine: DecodeEngine
+    draft_engine: Optional[DecodeEngine] = None
+    gamma: Optional[int] = None        # verification length; None -> NFP budget
+
+    def _gamma(self) -> int:
+        if self.gamma is not None:
+            return self.gamma
+        # NFP budget covers the whole forward: gamma drafts + 1 pending
+        return max(1, self.engine.nfp_budget() - 1)
+
+    def _propose(self, context: np.ndarray, pending: int, gamma: int
+                 ) -> np.ndarray:
+        if self.draft_engine is not None:
+            toks = []
+            last = jnp.full((self.engine.batch, 1), pending, jnp.int32)
+            for _ in range(gamma):
+                logits = self.draft_engine.decode_step(last)
+                last = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                toks.append(int(last[0, 0]))
+            return np.asarray(toks, np.int64)
+        return ngram_draft(np.append(context, pending), gamma,
+                           vocab_size=self.engine.cfg.vocab_size)
+
+    def generate(self, prompt: Array, max_tokens: int
+                 ) -> Tuple[np.ndarray, dict]:
+        """Greedy speculative generation (batch=1 driver).  Returns
+        (tokens, stats) — stats includes positions/forward utilization,
+        the quantity NFP normalizes (paper Sec. J.2.3)."""
+        eng = self.engine
+        logits = eng.prefill(prompt)
+        pending = int(jnp.argmax(logits[0]))
+        context = np.asarray(prompt[0])
+        generated: List[int] = [pending]
+        n_forwards, n_positions = 0, 0
+        while len(generated) < max_tokens:
+            gamma = min(self._gamma(), max_tokens - len(generated))
+            drafts = self._propose(context, pending, gamma)
+            block = np.concatenate([[pending], drafts]).astype(np.int64)
+            toks = jnp.asarray(block[None], jnp.int32)
+            toks = jnp.broadcast_to(toks, (eng.batch, toks.shape[1]))
+            step_logits, new_cache = eng.peek_step(toks)
+            n_forwards += 1
+            n_positions += len(block)
+            preds = np.asarray(jnp.argmax(step_logits[0], axis=-1))
+            k = 0
+            while k < gamma and preds[k] == drafts[k]:
+                k += 1
+            accepted = list(drafts[:k])
+            bonus = int(preds[k])
+            eng.commit(new_cache, 1 + k)
+            if self.draft_engine is not None:
+                # resync draft cache: simplest policy, re-prefill lazily
+                self.draft_engine.cache_len = eng.cache_len
+            context = np.concatenate([context, [pending], accepted])
+            generated.extend(accepted + [bonus])
+            pending = bonus
+        stats = {
+            "tokens": len(generated),
+            "forwards": n_forwards,
+            "positions": n_positions,
+            "tokens_per_forward": len(generated) / max(n_forwards, 1),
+            "position_utilization": len(generated) / max(n_positions, 1),
+        }
+        return np.asarray(generated[:max_tokens]), stats

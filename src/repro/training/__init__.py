@@ -1,0 +1,8 @@
+"""repro.training — optimizer, train step, schedules."""
+from repro.training.optimizer import (AdamWConfig, adamw_update,
+                                      clip_by_global_norm, global_norm,
+                                      init_opt_state, lr_schedule)
+from repro.training.train_step import (grad_accum_fn, loss_fn,
+                                       make_train_step, train_step)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,101 @@
+"""Hand-rolled AdamW with f32 master weights over bf16 params,
+global-norm clipping, and warmup+cosine LR schedules.
+
+Optimizer state pytree:
+  {"master": f32 params, "m": f32, "v": f32, "step": i32 scalar}
+bf16 params are re-derived from the master copy each update (mixed
+precision: bf16 compute/weights, f32 optimizer math).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup then cosine decay to min_lr_ratio*lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio * cfg.lr + (1 - cfg.min_lr_ratio) * cfg.lr * 0.5 \
+        * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict:
+    f32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(jnp.zeros_like, f32)
+    return {"master": f32, "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, f32),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _decay_mask(path_leaf) -> bool:
+    """No weight decay on norms / biases / scalar SSM params."""
+    name = "/".join(str(p) for p in path_leaf)
+    return not any(k in name for k in ("scale", "bias", "A_log", "A_logh", "D",
+                                       "dt_bias"))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state
+                 ) -> Tuple[Dict, Dict, Dict]:
+    """Returns (new_params (original dtypes), new_opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mo, g: b1 * mo + (1 - b1) * g,
+                     opt_state["m"], grads)
+    v = jax.tree.map(lambda vo, g: b2 * vo + (1 - b2) * g * g,
+                     opt_state["v"], grads)
+
+    paths = jax.tree_util.tree_flatten_with_path(opt_state["master"])[0]
+    decay_flags = [(1.0 if _decay_mask(p) else 0.0) for p, _ in paths]
+    flat_master, treedef = jax.tree_util.tree_flatten(opt_state["master"])
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    new_master = []
+    for p, mo, vo, wd in zip(flat_master, flat_m, flat_v, decay_flags):
+        update = (mo / bc1) / (jnp.sqrt(vo / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * wd * p
+        new_master.append(p - lr * update)
+    master = jax.tree_util.tree_unflatten(treedef, new_master)
+    # params keep their original dtypes (bf16 weights, f32 A_log/router/...)
+    new_params = jax.tree.map(lambda mast, old: mast.astype(old.dtype),
+                              master, params)
+    new_state = {"master": master, "m": m, "v": v, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

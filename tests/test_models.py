@@ -1,0 +1,179 @@
+"""Per-arch smoke tests (reduced configs) + decode-cache consistency.
+
+Each assigned architecture: instantiate the reduced config, run one
+forward/train step on CPU, assert output shapes + no NaNs (brief
+requirement), plus prefill+decode == full-forward consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import forward, init_cache, init_model
+from repro.training import AdamWConfig, init_opt_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, b, s, key=KEY):
+    if cfg.family == "vlm":
+        return {"embeds": jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.bfloat16)}
+    inp = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        inp["frames"] = jax.random.normal(
+            key, (b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return inp
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_model(KEY, cfg)
+    b, s = 2, 16
+    logits, _, aux = forward(params, cfg, _inputs(cfg, b, s), mode="train")
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_model(KEY, cfg)
+    opt = init_opt_state(params)
+    step = make_train_step(cfg, AdamWConfig(warmup_steps=1, total_steps=10))
+    b, s = 2, 16
+    batch = _inputs(cfg, b, s)
+    if "tokens" not in batch:   # vlm: labels still needed
+        batch["tokens"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # parameters actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b_, np.float32))
+        for a, b_ in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_model(KEY, cfg)
+    b, s, n = 2, 12, 4
+    cache = init_cache(cfg, b, s + n)
+    inp = _inputs(cfg, b, s)
+    _, cache, _ = forward(params, cfg, inp, mode="prefill", cache=cache,
+                          cache_len=0)
+    dec_in = _inputs(cfg, b, n, key=jax.random.PRNGKey(7))
+    if cfg.encoder is not None:
+        dec_in["frames"] = inp["frames"]
+    logits, cache2, _ = forward(params, cfg, dec_in, mode="decode",
+                                cache=cache,
+                                cache_len=jnp.asarray(s, jnp.int32))
+    assert logits.shape == (b, n, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+CONSISTENCY_ARCHS = ["stablelm_3b", "starcoder2_3b", "mixtral_8x22b",
+                     "falcon_mamba_7b", "zamba2_1p2b", "granite_moe_3b_a800m"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_decode_matches_full_forward(arch):
+    """The multi-position decode forward over a cache must agree with the
+    full forward — exact in bf16 for everything but reordered matmuls."""
+    cfg = get_config(arch, reduced=True)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    b, s, n = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + n), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
+    cache = init_cache(cfg, b, s + n)
+    _, cache, _ = forward(params, cfg, {"tokens": toks[:, :s]},
+                          mode="prefill", cache=cache, cache_len=0)
+    dec, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
+                        cache=cache, cache_len=jnp.asarray(s, jnp.int32))
+    a = np.asarray(full[:, s:], np.float32)
+    c = np.asarray(dec, np.float32)
+    err = np.max(np.abs(a - c)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 1e-5, err
+
+
+def test_mla_consistency_f32():
+    """MLA absorbed decode vs non-absorbed prefill agree in f32."""
+    cfg = get_config("minicpm3_4b", reduced=True)
+    params = init_model(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    b, s, n = 2, 12, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + n), 0,
+                              cfg.vocab_size)
+    full, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
+    cache = init_cache(cfg, b, s + n, dtype=jnp.float32)
+    _, cache, _ = forward(params, cfg, {"tokens": toks[:, :s]},
+                          mode="prefill", cache=cache, cache_len=0)
+    dec, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
+                        cache=cache, cache_len=jnp.asarray(s, jnp.int32))
+    a = np.asarray(full[:, s:], np.float32)
+    c = np.asarray(dec, np.float32)
+    err = np.max(np.abs(a - c)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 1e-4, err
+
+
+def test_swa_window_masks_old_tokens():
+    """Sliding-window attention must ignore tokens beyond the window."""
+    cfg = get_config("mixtral_8x22b", reduced=True)     # window=8
+    params = init_model(KEY, cfg)
+    b, s = 1, 20
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab_size)
+    # perturb a token far outside the window of the last position
+    t2 = t1.at[0, 2].set((t1[0, 2] + 1) % cfg.vocab_size)
+    l1, _, _ = forward(params, cfg, {"tokens": t1}, mode="train")
+    l2, _, _ = forward(params, cfg, {"tokens": t2}, mode="train")
+    # windowed attention -> last position unaffected... through attention;
+    # (the MoE router is also token-local, so only position 2 changes)
+    np.testing.assert_allclose(np.asarray(l1[0, -1], np.float32),
+                               np.asarray(l2[0, -1], np.float32),
+                               atol=1e-5)
+
+
+def test_param_count_close_to_billing():
+    """Full configs should land near their advertised sizes."""
+    import math
+    expect = {"phi3_medium_14b": 14e9, "starcoder2_3b": 3e9,
+              "falcon_mamba_7b": 7.3e9, "mixtral_8x22b": 141e9,
+              "stablelm_3b": 2.8e9}
+    for arch, target in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * target < n < 1.6 * target, (arch, n, target)
+
+
+def test_swa_ring_buffer_matches_full_cache():
+    """O(window) ring cache must be bit-equivalent to the O(seq) cache
+    through multiple wraparounds (multi-position blocks included)."""
+    cfg = get_config("mixtral_8x22b", reduced=True)     # window=8
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    b, total = 2, 40
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, total), 0,
+                              cfg.vocab_size)
+    blocks = [1, 3, 2, 4, 1, 5, 8, 2, 6, 3, 5]
+
+    def run(swa_ring):
+        cache = init_cache(cfg, b, 64, swa_ring=swa_ring, ring_headroom=8)
+        cl = jnp.zeros((), jnp.int32)
+        outs, pos = [], 0
+        for nb in blocks:
+            lg, cache, _ = forward(params, cfg,
+                                   {"tokens": toks[:, pos:pos + nb]},
+                                   mode="decode", cache=cache, cache_len=cl,
+                                   swa_ring=swa_ring)
+            outs.append(np.asarray(lg, np.float32))
+            cl = cl + nb
+            pos += nb
+        return np.concatenate(outs, axis=1)
+
+    ref, ring = run(False), run(True)
+    err = np.max(np.abs(ref - ring)) / (np.max(np.abs(ref)) + 1e-9)
+    assert err < 1e-5, err

@@ -1,0 +1,131 @@
+"""Serving: engine semantics, speculative losslessness, diffusion decode,
+NFP budget integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.serving import (DecodeEngine, DiffusionBlockDecoder,
+                           SpeculativeDecoder, ngram_draft)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("stablelm_3b", reduced=True)
+    params = init_model(KEY, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                cfg.vocab_size)
+    return cfg, params, prompt
+
+
+def test_engine_multi_position_step(dense_setup):
+    cfg, params, prompt = dense_setup
+    eng = DecodeEngine(cfg, params, batch=1, max_len=128)
+    eng.prefill(prompt)
+    logits = eng.decode_step(jax.random.randint(KEY, (1, 4), 0,
+                                                cfg.vocab_size))
+    assert logits.shape == (1, 4, cfg.vocab_size)
+    assert int(eng.cache_len) == prompt.shape[1] + 4
+
+
+def test_speculative_matches_ar_greedy(dense_setup):
+    """Greedy speculative decoding is LOSSLESS: identical to AR greedy."""
+    cfg, params, prompt = dense_setup
+    eng = DecodeEngine(cfg, params, batch=1, max_len=256)
+    ar = np.asarray(eng.greedy_generate(prompt, 24)[0])
+    for gamma in (2, 4, 7):
+        eng2 = DecodeEngine(cfg, params, batch=1, max_len=256)
+        toks, stats = SpeculativeDecoder(eng2, gamma=gamma).generate(
+            prompt, 24)
+        assert np.array_equal(ar, toks[:24]), gamma
+        assert stats["tokens_per_forward"] >= 1.0
+
+
+def test_speculative_uses_nfp_budget(dense_setup):
+    cfg, params, prompt = dense_setup
+    eng = DecodeEngine(cfg, params, batch=1, max_len=256)
+    spec = SpeculativeDecoder(eng)          # gamma=None -> NFP budget
+    budget = eng.nfp_budget()
+    assert spec._gamma() == max(1, budget - 1)
+
+
+def test_diffusion_block_decode(dense_setup):
+    cfg, params, prompt = dense_setup
+    eng = DecodeEngine(cfg, params, batch=1, max_len=256)
+    dec = DiffusionBlockDecoder(eng, block_size=8, refine_steps=2)
+    toks, stats = dec.generate(prompt, 16)
+    assert len(toks) == 16
+    assert stats["tokens_per_forward"] > 1.5   # block parallelism realized
+    mask_id = cfg.vocab_size - 1
+    assert not np.any(toks == mask_id)         # everything resolved
+
+
+def test_ngram_draft_repeats_patterns():
+    ctx = np.asarray([5, 6, 7, 5, 6], np.int64)
+    out = ngram_draft(ctx, gamma=2, vocab_size=100)
+    assert out[0] == 7                          # suffix [5,6] -> 7
+
+
+def test_nfp_budget_tracks_batch(dense_setup):
+    """The budget must shrink as serving batch grows (rho*s/2b term)."""
+    cfg, params, _ = dense_setup
+    budgets = []
+    for b in (1, 4):
+        eng = DecodeEngine(cfg, params, batch=b, max_len=64)
+        eng.cache_len = jnp.asarray(32, jnp.int32)
+        budgets.append(eng.nfp_budget())
+    assert budgets[0] >= budgets[1]
+
+
+def test_moe_engine_budget_routing_cases():
+    # NOTE: skew <= bal holds when tau = E >= M_moe (paper's E=256 regime);
+    # for tiny-E smoke configs the tau branch can bind the balanced case
+    # first (Eq. 13 has tau, Eq. 14 does not) — so use the E=16 config.
+    cfg = get_config("llada_mini_like", reduced=True)
+    params = init_model(KEY, cfg)
+    eng = DecodeEngine(cfg, params, batch=1, max_len=64)
+    eng.cache_len = jnp.asarray(16, jnp.int32)
+    bal = eng.nfp_budget(routing="balanced")
+    skew = eng.nfp_budget(routing="skewed")
+    assert skew <= bal                          # paper: skew = lower bound
+    # full-size MoE (E=256, k=8): strict separation, paper Sec. 5.2
+    from repro.core import GranularitySpec, TPU_V5E, predict_model
+    full = get_config("llada_mini_like")
+    g = GranularitySpec.for_backend(full.ffn.n_experts)
+    b2 = predict_model(full, TPU_V5E, g, 1, 4096, routing="balanced")
+    s2 = predict_model(full, TPU_V5E, g, 1, 4096, routing="skewed")
+    assert s2.n_max < b2.n_max
+
+
+def test_mtp_decoder_lossless_and_budgeted(dense_setup):
+    """MTP verification forward = multi-position decode; greedy acceptance
+    keeps the stream identical to AR greedy."""
+    from repro.serving import MTPDecoder, init_mtp_heads
+    cfg, params, prompt = dense_setup
+    eng = DecodeEngine(cfg, params, batch=1, max_len=256)
+    ar = np.asarray(eng.greedy_generate(prompt, 20)[0])
+    heads = init_mtp_heads(jax.random.PRNGKey(5), cfg.d_model,
+                           cfg.vocab_size, n_heads=4)
+    eng2 = DecodeEngine(cfg, params, batch=1, max_len=256)
+    dec = MTPDecoder(eng2, heads)
+    assert dec._n() <= max(1, eng2.nfp_budget() - 1)   # budget respected
+    toks, stats = dec.generate(prompt, 20)
+    assert np.array_equal(ar, toks[:20])
+    assert stats["tokens_per_forward"] >= 1.0
+
+
+def test_mtp_loss_trains_heads():
+    from repro.serving import init_mtp_heads, mtp_loss
+    d, v = 32, 64
+    heads = init_mtp_heads(jax.random.PRNGKey(0), d, v, 3,
+                           dtype=jnp.float32)
+    hidden = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, v)
+    loss, grads = jax.value_and_grad(mtp_loss)(heads, hidden, tokens)
+    assert np.isfinite(float(loss))
+    g = np.asarray(grads["heads"], np.float32)
+    assert np.abs(g).max() > 0
