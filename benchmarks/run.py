@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   lookup        — paper Table 24 (+ TPU v5e / 10-arch extension)
   roofline      — brief deliverable (g), from dry-run artifacts
   cpu_wallclock — real-silicon sanity sweeps
+  serving_throughput — scheduler tokens/s vs concurrency (NFP budget)
 """
 from __future__ import annotations
 
@@ -19,7 +20,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import (attention, cpu_wallclock, dense_ffn, lookup,
-                            model_nfp, moe_ffn, roofline, sensitivity)
+                            model_nfp, moe_ffn, roofline, sensitivity,
+                            serving_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("dense_ffn", dense_ffn.run),
@@ -30,6 +32,7 @@ def main() -> None:
         ("lookup", lookup.run),
         ("roofline", roofline.run),
         ("cpu_wallclock", cpu_wallclock.run),
+        ("serving_throughput", serving_throughput.run),
     ]
     failed = []
     for name, fn in sections:

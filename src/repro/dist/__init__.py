@@ -1,0 +1,14 @@
+"""repro.dist — sharded execution: expert parallelism, sharding rules,
+elastic / fault-tolerant training."""
+from repro.dist.elastic import (StepWatchdog, elastic_mesh,
+                                run_with_restarts)
+from repro.dist.ep_moe import ep_moe_ffn
+from repro.dist.sharding import (batch_pspec, cache_pspecs, mesh_axes,
+                                 opt_pspecs, param_pspecs,
+                                 shardings_from_pspecs)
+
+__all__ = [
+    "StepWatchdog", "elastic_mesh", "run_with_restarts", "ep_moe_ffn",
+    "batch_pspec", "cache_pspecs", "mesh_axes", "opt_pspecs",
+    "param_pspecs", "shardings_from_pspecs",
+]

@@ -1,0 +1,244 @@
+"""Sharding rules: PartitionSpecs for params / optimizer / batch / cache.
+
+One rule table serves the trainer, the dry-run compiler and the serving
+stack.  Everything is divisibility-checked against the actual leaf
+shapes and the actual mesh, falling back to replication — a rule that
+does not divide evenly is silently weaker, never an XLA error.
+
+Policies (``param_pspecs``):
+  fsdp     2D: tensor-parallel over the ``model`` axis by role, plus a
+           ZeRO-3-style shard of a remaining dim over the data axes.
+  auto     alias of fsdp (the measured default; see EXPERIMENTS notes in
+           launch/specs.py for the MoE/TP regression that motivated it).
+  tp_only  tensor-parallel only; weights replicated across data axes.
+  dp_only  fully replicated params (pure data parallelism).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...]]
+
+
+# ===========================================================================
+# Mesh introspection
+# ===========================================================================
+
+def mesh_axes(mesh: Mesh) -> Tuple[Axes, str]:
+    """(fsdp_axes, model_axis): the data-parallel axes (a single name or a
+    tuple — e.g. ("pod", "data") on the multi-pod mesh) and the
+    tensor/expert-parallel axis."""
+    names = tuple(mesh.axis_names)
+    model = "model" if "model" in names else names[-1]
+    dp = tuple(a for a in names if a != model)
+    if len(dp) == 1:
+        return dp[0], model
+    return dp, model
+
+
+def _dp_tuple(mesh: Mesh) -> Tuple[str, ...]:
+    dp, _ = mesh_axes(mesh)
+    return dp if isinstance(dp, tuple) else (dp,)
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+# ===========================================================================
+# Batch
+# ===========================================================================
+
+def batch_pspec(mesh: Mesh, batch: int, include_model: bool = False) -> P:
+    """Pspec for a (batch, seq) input: batch sharded over as many
+    data axes as divide it (plus the model axis for dp_only training,
+    where the whole fleet is one big data-parallel group)."""
+    cand = list(_dp_tuple(mesh))
+    if include_model:
+        cand.append(mesh_axes(mesh)[1])
+    used = []
+    size = 1
+    for a in cand:
+        if batch % (size * mesh.shape[a]) == 0:
+            used.append(a)
+            size *= mesh.shape[a]
+    if not used:
+        return P(None, None)
+    return P(tuple(used) if len(used) > 1 else used[0], None)
+
+
+# ===========================================================================
+# Params
+# ===========================================================================
+
+# role -> which dim (negative, so stacked-layer leading dims are
+# transparent) is tensor-parallel.  Output-projection weights shard the
+# contracting (input) dim so the row-parallel matmul finishes with one
+# psum, matching the Megatron column/row pairing.
+_TP_LAST = ("wq", "wk", "wv", "w_up", "w_gate", "wq_b", "wkv_b",
+            "shared_up", "lm_head", "in_proj", "up", "gate")
+_TP_PENULT = ("wo", "w_down", "shared_down", "out_proj", "down")
+_TP_DIM0 = ("table",)                        # embedding: shard the vocab dim
+_REPLICATED = ("scale", "bias", "router", "A_log", "A_logh", "D", "dt_bias",
+               "q_norm", "kv_norm", "conv")
+
+
+def _leaf_name(path) -> str:
+    return jax.tree_util.keystr(path).lower()
+
+
+def _tp_dim(name: str, ndim: int) -> Optional[int]:
+    last = name.rsplit("'", 2)
+    leaf = last[-2] if len(last) >= 2 else name
+    if any(r in leaf for r in _REPLICATED):
+        return None
+    if any(leaf.endswith(r) or r in leaf for r in _TP_PENULT):
+        return ndim - 2 if ndim >= 2 else None
+    if any(leaf.endswith(r) or r in leaf for r in _TP_LAST):
+        return ndim - 1
+    if "table" in leaf and ndim >= 2:
+        return ndim - 2                       # (V, d) / (L, V, d): vocab dim
+    return None
+
+
+def param_pspecs(params, mesh: Mesh, policy: str = "fsdp"):
+    """Tree of PartitionSpecs matching ``params``."""
+    if policy not in ("fsdp", "auto", "tp_only", "dp_only"):
+        raise ValueError(f"unknown sharding policy {policy!r}")
+    dp = _dp_tuple(mesh)
+    dp_size = _axes_size(mesh, dp)
+    _, model = mesh_axes(mesh)
+    model_size = mesh.shape[model]
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim == 0 or policy == "dp_only":
+            return P()
+        dims: list = [None] * ndim
+        name = _leaf_name(path)
+        td = _tp_dim(name, ndim)
+        if td is not None and shape[td] % model_size == 0 and model_size > 1:
+            dims[td] = model
+        if policy in ("fsdp", "auto") and dp_size > 1:
+            # ZeRO-style: shard the largest still-free dim over data axes
+            free = [i for i in range(ndim)
+                    if dims[i] is None and shape[i] % dp_size == 0]
+            if free:
+                big = max(free, key=lambda i: shape[i])
+                if shape[big] >= dp_size:
+                    dims[big] = dp if len(dp) > 1 else dp[0]
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+# ===========================================================================
+# Optimizer
+# ===========================================================================
+
+def _is_ps(x) -> bool:
+    return isinstance(x, P) or x is None
+
+
+def opt_pspecs(opt, param_ps, mesh: Optional[Mesh] = None):
+    """Optimizer-state pspecs: master/m/v mirror the param layout; the
+    step counter is replicated.  With ``mesh`` given, leaves that ended
+    up replicated are additionally sharded over the data axes (ZeRO-2:
+    optimizer memory scales down even where params stay replicated)."""
+    def upgrade(ps, leaf):
+        if ps is None:
+            ps = P()
+        if any(d is not None for d in ps):
+            return ps
+        dp = _dp_tuple(mesh)
+        dp_size = _axes_size(mesh, dp)
+        if dp_size <= 1:
+            return ps
+        shape = leaf.shape
+        for i in sorted(range(len(shape)), key=lambda i: -shape[i]):
+            if shape[i] % dp_size == 0 and shape[i] >= dp_size:
+                dims = [None] * len(shape)
+                dims[i] = dp if len(dp) > 1 else dp[0]
+                return P(*dims)
+        return ps
+
+    out = {}
+    for key in ("master", "m", "v"):
+        if mesh is not None:
+            out[key] = jax.tree_util.tree_map(upgrade, param_ps, opt[key],
+                                              is_leaf=_is_ps)
+        else:
+            out[key] = param_ps
+    out["step"] = P()
+    return out
+
+
+# ===========================================================================
+# Decode cache
+# ===========================================================================
+
+def cache_pspecs(cache, mesh: Mesh, batch: int, mode: str = "head"):
+    """Pspecs for the pre-allocated decode cache.
+
+    Leaves are stacked per layer: KV caches are (L, b, s, kv_heads, dh),
+    MLA latents (L, b, s, r), SSM states (L, b, ...).  The batch dim is
+    sharded over the data axes; ``mode`` picks where the model axis goes:
+
+      head  KV-head (or feature) sharding — no resharding vs the
+            per-layer TP attention math; the production serving default.
+      seq   sequence sharding — balances long-context cache memory at
+            the cost of one gather per step (the dry run's "opt" decode
+            variant measures exactly that trade).
+    """
+    if mode not in ("head", "seq"):
+        raise ValueError(f"unknown cache mode {mode!r}")
+    dp = _dp_tuple(mesh)
+    dp_size = _axes_size(mesh, dp)
+    _, model = mesh_axes(mesh)
+    model_size = mesh.shape[model]
+    bdim = dp if len(dp) > 1 else dp[0]
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        if ndim < 2:
+            return P()
+        # locate the batch dim (dim 0 of unstacked leaves, dim 1 stacked)
+        b_at = next((i for i in (1, 0) if i < ndim and shape[i] == batch),
+                    None)
+        dims: list = [None] * ndim
+        if (b_at is not None and dp_size > 1
+                and shape[b_at] % dp_size == 0):
+            dims[b_at] = bdim
+        if model_size > 1 and b_at is not None:
+            if mode == "seq" and b_at + 1 < ndim and \
+                    shape[b_at + 1] % model_size == 0:
+                dims[b_at + 1] = model
+            elif mode == "head":
+                # prefer the heads dim (b+2); fall back to the last dim
+                for i in (b_at + 2, ndim - 1):
+                    if i < ndim and i != b_at and dims[i] is None \
+                            and i != b_at + 1 and \
+                            shape[i] % model_size == 0:
+                        dims[i] = model
+                        break
+        return P(*dims)
+
+    return jax.tree_util.tree_map(leaf_spec, cache)
+
+
+# ===========================================================================
+# Materialization
+# ===========================================================================
+
+def shardings_from_pspecs(pspecs, mesh: Mesh):
+    """Tree of NamedShardings from a tree of PartitionSpecs (None leaves
+    become fully-replicated shardings, matching jit's convention)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s if isinstance(s, P) else P()),
+        pspecs, is_leaf=lambda x: isinstance(x, P) or x is None)

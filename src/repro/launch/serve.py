@@ -1,12 +1,18 @@
 """Production serving launcher: multi-position decode with the NFP budget.
 
+Single-request (algorithm drivers):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --tiny \
       --algorithm speculative --tokens 48
 
+Multi-request (budget-aware continuous batching):
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --tiny \
+      --requests 8 --slots 4 --serve-mode speculative --tokens 32
+
 Loads (or random-inits) a model, builds the decode engine, selects the
 parallelism level from the NFP principle for the current hardware +
-batch + context, and serves batched greedy / speculative / diffusion
-generation.
+batch + context, and serves generation — one request through a
+parallel-decoding driver, or many through the ServingLoop scheduler
+that splits the budget across concurrent requests.
 """
 from __future__ import annotations
 
@@ -14,40 +20,18 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore
 from repro.configs import get_config
-from repro.core import TPU_V5E, get_hardware
+from repro.core import get_hardware
 from repro.models import init_model
 from repro.serving import (DecodeEngine, DiffusionBlockDecoder,
-                           SpeculativeDecoder)
+                           MTPDecoder, ServingLoop, SpeculativeDecoder,
+                           init_mtp_heads)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm_3b")
-    ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--algorithm", default="speculative",
-                    choices=["greedy", "speculative", "diffusion"])
-    ap.add_argument("--tokens", type=int, default=48)
-    ap.add_argument("--batch", type=int, default=1)
-    ap.add_argument("--max-len", type=int, default=512)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--hardware", default="tpu_v5e")
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--use-kernel", action="store_true",
-                    help="Pallas decode kernel (interpret on CPU)")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, reduced=args.tiny)
-    params = init_model(jax.random.PRNGKey(0), cfg)
-    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
-        (restored, _) = restore(args.ckpt_dir, {"params": params})
-        params = restored["params"]
-        print(f"loaded checkpoint from {args.ckpt_dir}")
-
+def _single_request(args, cfg, params) -> None:
     eng = DecodeEngine(cfg, params, batch=args.batch, max_len=args.max_len,
                        hardware=get_hardware(args.hardware),
                        use_kernel=args.use_kernel)
@@ -60,6 +44,10 @@ def main() -> None:
         stats = {"tokens": args.tokens, "forwards": args.tokens}
     elif args.algorithm == "speculative":
         out, stats = SpeculativeDecoder(eng).generate(prompt, args.tokens)
+    elif args.algorithm == "mtp":
+        heads = init_mtp_heads(jax.random.PRNGKey(5), cfg.d_model,
+                               cfg.vocab_size, n_heads=4)
+        out, stats = MTPDecoder(eng, heads).generate(prompt, args.tokens)
     else:
         out, stats = DiffusionBlockDecoder(eng).generate(prompt, args.tokens)
     dt = time.time() - t0
@@ -69,6 +57,71 @@ def main() -> None:
           f"({stats.get('forwards', '?')} forwards, "
           f"{stats.get('tokens_per_forward', 1):.2f} tok/fwd)")
     print("tokens:", out[:32], "...")
+
+
+def _multi_request(args, cfg, params) -> None:
+    eng = DecodeEngine(cfg, params, batch=args.slots, max_len=args.max_len,
+                       hardware=get_hardware(args.hardware),
+                       use_kernel=args.use_kernel)
+    loop = ServingLoop(eng, mode=args.serve_mode)
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
+                                    (args.prompt_len,), 0, cfg.vocab_size)
+        loop.submit(np.asarray(prompt), args.tokens)
+    t0 = time.time()
+    results = loop.run()
+    dt = time.time() - t0
+    s = loop.stats()
+    # serving-time budget: run() released the slots, so read it from the
+    # step log rather than recomputing at an empty cache
+    budgets = [e["budget"] for e in loop.step_log] or [loop.budget()]
+    print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
+          f"requests={args.requests} "
+          f"nfp_budget={min(budgets)}..{max(budgets)}")
+    print(f"served {s['requests']} requests / {s['tokens']} tokens in "
+          f"{dt:.2f}s  ({s['forwards']} forwards, "
+          f"{s['tokens_per_forward']:.2f} tok/fwd, "
+          f"max {s['max_positions_per_forward']} positions/fwd)")
+    print(f"throughput: {s['tokens'] / max(dt, 1e-9):.1f} tok/s")
+    for rid, toks in list(results.items())[:4]:
+        print(f"  req {rid}: {toks[:16]} ...")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm_3b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--algorithm", default="speculative",
+                    choices=["greedy", "speculative", "diffusion", "mtp"])
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--hardware", default="tpu_v5e")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas decode kernel (interpret on CPU)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="multi-request mode: serve N concurrent requests "
+                         "through the budget-aware scheduler")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="cache slots (max concurrent requests)")
+    ap.add_argument("--serve-mode", default="greedy",
+                    choices=["greedy", "speculative"],
+                    help="scheduler mode for --requests")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.tiny)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (restored, _) = restore(args.ckpt_dir, {"params": params})
+        params = restored["params"]
+        print(f"loaded checkpoint from {args.ckpt_dir}")
+
+    if args.requests > 0:
+        _multi_request(args, cfg, params)
+    else:
+        _single_request(args, cfg, params)
 
 
 if __name__ == "__main__":

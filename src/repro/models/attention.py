@@ -86,6 +86,25 @@ def _gqa_core(q: Array, k: Array, v: Array, mask: Array, scale: float) -> Array:
     return ctx.reshape(b, sq, h, dh)
 
 
+def _row_offsets(cache_len, batch: int) -> Array:
+    """Per-row cache lengths: a scalar ``cache_len`` (every row at the
+    same position — the single-request drivers) or a (b,) vector (the
+    scheduler's slotted cache, each slot at its own length)."""
+    cl = jnp.asarray(cache_len, jnp.int32)
+    if cl.ndim == 0:
+        return jnp.full((batch,), cl, jnp.int32)
+    return cl
+
+
+def _update_rows(cache: Array, new: Array, offsets: Array) -> Array:
+    """Write ``new`` (b, n, ...) into ``cache`` (b, s, ...) at per-row
+    sequence offsets (vmapped dynamic_update_slice)."""
+    def one(c, x, off):
+        start = (off,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, x, start)
+    return jax.vmap(one)(cache, new, offsets)
+
+
 def _causal_mask(q_pos: Array, kv_pos: Array,
                  window: Optional[int] = None,
                  kv_valid: Optional[Array] = None) -> Array:
@@ -135,23 +154,34 @@ def gqa_full(params, a: AttentionSpec, x: Array, positions: Array,
 def gqa_decode(params, a: AttentionSpec, x: Array, cache: Dict,
                cache_len, theta: float,
                use_kernel: bool = False) -> Tuple[Array, Dict]:
-    """Multi-position decode forward: N new positions vs cache (Eq. 2)."""
+    """Multi-position decode forward: N new positions vs cache (Eq. 2).
+
+    ``cache_len`` may be a scalar (all rows aligned) or a (b,) vector
+    (scheduler-slotted cache: each batch row decodes at its own length).
+    """
     b, n, d = x.shape
     s_max = cache["k"].shape[1]
-    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)[None, :]          # (1,n)
-    q_pos = jnp.broadcast_to(q_pos, (b, n))
+    per_row = jnp.ndim(cache_len) > 0
+    offsets = _row_offsets(cache_len, b)
+    q_pos = offsets[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]  # (b,n)
     q = (x @ params["wq"]).reshape(b, n, a.n_heads, a.head_dim)
     k = (x @ params["wk"]).reshape(b, n, a.n_kv_heads, a.head_dim)
     v = (x @ params["wv"]).reshape(b, n, a.n_kv_heads, a.head_dim)
     q = apply_rope(q, q_pos, theta)
     k = apply_rope(k, q_pos, theta)
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, cache_len, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, cache_len, 0, 0))
+    if per_row:
+        k_cache = _update_rows(cache["k"], k, offsets)
+        v_cache = _update_rows(cache["v"], v, offsets)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k,
+                                               (0, cache_len, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v,
+                                               (0, cache_len, 0, 0))
     kv_pos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None, :],
                               (b, s_max))
     window = a.window if a.kind == "swa" else None
     scale = 1.0 / (a.head_dim ** 0.5)
-    if use_kernel:
+    if use_kernel and not per_row:
         from repro.kernels.decode_attention.ops import decode_attention
         ctx = decode_attention(q, k_cache, v_cache, cache_len + n,
                                window=window)
@@ -279,14 +309,19 @@ def mla_decode(params, a: AttentionSpec, x: Array, cache: Dict,
     cache (KV traffic = latent bytes — the d_latent term in the NFP model)."""
     b, n, _ = x.shape
     s_max = cache["latent"].shape[1]
-    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)[None, :]
-    q_pos = jnp.broadcast_to(q_pos, (b, n))
+    per_row = jnp.ndim(cache_len) > 0
+    offsets = _row_offsets(cache_len, b)
+    q_pos = offsets[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
     q_nope, q_rope = _mla_q(params, a, x, q_pos, theta)
     latent_new, k_rope_new = _mla_latent(params, a, x, q_pos, theta)
-    latent = jax.lax.dynamic_update_slice(cache["latent"], latent_new,
-                                          (0, cache_len, 0))
-    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
-                                          (0, cache_len, 0))
+    if per_row:
+        latent = _update_rows(cache["latent"], latent_new, offsets)
+        k_rope = _update_rows(cache["k_rope"], k_rope_new, offsets)
+    else:
+        latent = jax.lax.dynamic_update_slice(cache["latent"], latent_new,
+                                              (0, cache_len, 0))
+        k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope_new,
+                                              (0, cache_len, 0))
     wkv_b = params["wkv_b"].reshape(a.kv_lora_rank, a.n_heads,
                                     a.qk_nope_head_dim + a.v_head_dim)
     wk = wkv_b[..., : a.qk_nope_head_dim]           # (lora, h, d_nope)

@@ -285,7 +285,9 @@ def forward(params, cfg: ArchConfig, inputs: Dict, *, mode: str = "train",
     memory = None
     if cfg.encoder is not None:
         memory = encode(params, cfg, inputs["frames"])
-        pos0 = cache_len if mode == "decode" else 0
+        pos0 = jnp.asarray(cache_len if mode == "decode" else 0, jnp.int32)
+        if pos0.ndim == 1:                       # per-slot cache lengths
+            pos0 = pos0[:, None]
         tok_pos = pos0 + jnp.arange(s, dtype=jnp.int32)[None]
         x = (x.astype(jnp.float32)
              + _sinusoidal(jnp.broadcast_to(tok_pos, (b, s)), cfg.d_model)

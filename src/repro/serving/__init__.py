@@ -1,8 +1,13 @@
-"""repro.serving — multi-position decode engine + parallel-decoding drivers."""
+"""repro.serving — multi-position decode engine, the common parallel-
+decoding protocol, algorithm drivers, and the multi-request scheduler."""
+from repro.serving.algorithm import DecodeStats, ParallelDecodeAlgorithm
 from repro.serving.diffusion import DiffusionBlockDecoder
 from repro.serving.engine import DecodeEngine
 from repro.serving.mtp import MTPDecoder, init_mtp_heads, mtp_loss
+from repro.serving.scheduler import Request, ServingLoop
 from repro.serving.speculative import SpeculativeDecoder, ngram_draft
 
-__all__ = ["DecodeEngine", "SpeculativeDecoder", "DiffusionBlockDecoder",
-           "MTPDecoder", "init_mtp_heads", "mtp_loss", "ngram_draft"]
+__all__ = ["DecodeEngine", "DecodeStats", "ParallelDecodeAlgorithm",
+           "SpeculativeDecoder", "DiffusionBlockDecoder", "MTPDecoder",
+           "Request", "ServingLoop", "init_mtp_heads", "mtp_loss",
+           "ngram_draft"]

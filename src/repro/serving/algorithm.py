@@ -1,0 +1,140 @@
+"""Common protocol for parallel-decoding algorithms.
+
+Every family the paper abstracts — speculative verification, MTP head
+verification, diffusion block refinement — is the same system-level
+loop: PROPOSE a block of candidate positions, VERIFY it with one (or a
+few) multi-position decode forwards (Eq. 2), COMMIT the accepted prefix
+to the KV cache.  The NFP budget caps the block width in every case
+(paper Sec. 6), so the driver machinery — prefill, width selection,
+forward/stats accounting, context bookkeeping, commit arithmetic — is
+algorithm-independent and lives here once.
+
+A new algorithm implements ``propose`` (and optionally ``resolve`` when
+verification is not single-forward greedy acceptance) and inherits the
+rest; see ``speculative.py`` / ``mtp.py`` / ``diffusion.py`` for the
+three ~50-line instantiations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import DecodeEngine
+
+__all__ = ["DecodeStats", "ParallelDecodeAlgorithm"]
+
+
+@dataclass
+class DecodeStats:
+    """Position/forward accounting — the quantities NFP normalizes
+    (paper Sec. J.2.3)."""
+
+    tokens: int = 0
+    forwards: int = 0
+    positions: int = 0
+
+    @property
+    def tokens_per_forward(self) -> float:
+        return self.tokens / max(self.forwards, 1)
+
+    @property
+    def position_utilization(self) -> float:
+        return self.tokens / max(self.positions, 1)
+
+    def as_dict(self) -> Dict:
+        return {
+            "tokens": self.tokens,
+            "forwards": self.forwards,
+            "positions": self.positions,
+            "tokens_per_forward": self.tokens_per_forward,
+            "position_utilization": self.position_utilization,
+        }
+
+
+@dataclass
+class ParallelDecodeAlgorithm:
+    """Propose -> verify -> commit driver over one DecodeEngine.
+
+    Subclass protocol:
+      parallel_width()        block width for the next step; the default
+                              spends the engine's NFP budget (reserving
+                              one position for the pending token).
+      propose(ctx, pending, n) length-n candidate block (np.int64).
+      resolve(pending, drafts) verify + commit; returns (committed
+                              tokens — now in the cache after
+                              ``pending`` — and the next pending token).
+                              Default: one multi-position forward with
+                              greedy prefix acceptance, which keeps the
+                              output stream identical to AR greedy.
+      begin(prompt, pending)  optional hook after target prefill
+                              (draft-model setup and the like).
+    """
+
+    engine: DecodeEngine
+
+    def __post_init__(self):
+        self.stats = DecodeStats()
+
+    # ------------------------------------------------------------------
+    # protocol (overridable)
+    # ------------------------------------------------------------------
+    def parallel_width(self) -> int:
+        return max(1, self.engine.nfp_budget() - 1)
+
+    def begin(self, prompt: np.ndarray, pending: int) -> None:
+        pass
+
+    def propose(self, context: np.ndarray, pending: int,
+                n: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def resolve(self, pending: int, drafts: np.ndarray
+                ) -> Tuple[List[int], int]:
+        """Greedy verification: accept the longest draft prefix the
+        target model reproduces, plus the model's own next token."""
+        block = np.concatenate([[pending], drafts]).astype(np.int64)
+        logits, new_cache = self.forward_block(block)
+        preds = np.asarray(jnp.argmax(logits[0], axis=-1))
+        k = 0
+        while k < len(drafts) and preds[k] == drafts[k]:
+            k += 1
+        self.engine.commit(new_cache, 1 + k)
+        return list(drafts[:k]), int(preds[k])
+
+    # ------------------------------------------------------------------
+    # shared machinery
+    # ------------------------------------------------------------------
+    def forward_block(self, block: np.ndarray):
+        """One multi-position decode forward over ``block`` WITHOUT
+        committing; tracks forward/position stats."""
+        eng = self.engine
+        toks = jnp.broadcast_to(jnp.asarray(block[None], jnp.int32),
+                                (eng.batch, len(block)))
+        logits, new_cache = eng.peek_step(toks)
+        self.stats.forwards += 1
+        self.stats.positions += len(block)
+        return logits, new_cache
+
+    def generate(self, prompt, max_tokens: int
+                 ) -> Tuple[np.ndarray, Dict]:
+        """Greedy generation (batch=1 driver).  Returns (tokens, stats)."""
+        eng = self.engine
+        self.stats = DecodeStats()
+        logits = eng.prefill(prompt)
+        pending = int(jnp.argmax(logits[0]))
+        context = np.asarray(prompt[0]).astype(np.int64)
+        generated: List[int] = [pending]
+        self.begin(np.asarray(prompt), pending)
+        while len(generated) < max_tokens:
+            n = min(self.parallel_width(), max_tokens - len(generated))
+            drafts = self.propose(context, pending, n)
+            committed, next_pending = self.resolve(pending, drafts)
+            context = np.concatenate(
+                [context, [pending], committed]).astype(np.int64)
+            generated.extend(list(committed) + [next_pending])
+            pending = next_pending
+        self.stats.tokens = len(generated)
+        return np.asarray(generated[:max_tokens]), self.stats.as_dict()

@@ -3,27 +3,32 @@ iterative refinement) — the DLLM side of the paper's validation.
 
 A block of N positions (N = the NFP budget) starts as [MASK] tokens and
 is refined over ``refine_steps`` decode forwards; each iteration commits
-the most confident still-masked positions.  Every refinement forward is a
-multi-position decode forward of exactly N+1 positions, so the block size
-is the parallelism knob the NFP budget governs (paper Sec. 6:
+the most confident still-masked positions.  Every refinement forward is
+a multi-position decode forward of exactly N+1 positions, so the block
+size is the parallelism knob the NFP budget governs (paper Sec. 6:
 "diffusion-style block size").
+
+Under the common protocol: ``propose`` emits the mask block and
+``resolve`` replaces the single-forward greedy verification with the
+iterative refinement loop — commit arithmetic and stats stay inherited.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.algorithm import ParallelDecodeAlgorithm
 from repro.serving.engine import DecodeEngine
 
 Array = jax.Array
 
 
 @dataclass
-class DiffusionBlockDecoder:
+class DiffusionBlockDecoder(ParallelDecodeAlgorithm):
     engine: DecodeEngine
     block_size: Optional[int] = None     # None -> NFP budget
     refine_steps: int = 4
@@ -34,52 +39,45 @@ class DiffusionBlockDecoder:
             return self.block_size
         return max(1, self.engine.nfp_budget() - 1)
 
-    def generate(self, prompt: Array, max_tokens: int
-                 ) -> Tuple[np.ndarray, dict]:
-        eng = self.engine
-        mask_id = (self.mask_id if self.mask_id is not None
-                   else eng.cfg.vocab_size - 1)
-        logits = eng.prefill(prompt)
-        pending = int(jnp.argmax(logits[0]))
-        generated = [pending]
-        n_forwards, n_positions = 0, 0
-        while len(generated) < max_tokens:
-            n = min(self._block(), max_tokens - len(generated))
-            block = np.full((n,), mask_id, np.int64)
-            resolved = np.zeros((n,), bool)
-            per_iter = max(1, int(np.ceil(n / self.refine_steps)))
-            new_cache = None
-            for _ in range(self.refine_steps):
-                if resolved.all():
-                    break
-                toks = np.concatenate([[pending], block])
-                tj = jnp.broadcast_to(jnp.asarray(toks[None], jnp.int32),
-                                      (eng.batch, n + 1))
-                step_logits, new_cache = eng.peek_step(tj)
-                n_forwards += 1
-                n_positions += n + 1
-                lg = np.asarray(step_logits[0].astype(jnp.float32))
-                # position i of the block is predicted by logits row i
-                probs = np.exp(lg - lg.max(-1, keepdims=True))
-                probs /= probs.sum(-1, keepdims=True)
-                conf = probs.max(-1)[:n]
-                preds = probs.argmax(-1)[:n]
-                cand = np.where(~resolved)[0]
-                order = cand[np.argsort(-conf[cand])]
-                pick = order[:per_iter]
-                block[pick] = preds[pick]
-                resolved[pick] = True
-            block[~resolved] = np.asarray(
-                jnp.argmax(step_logits[0], axis=-1))[:n][~resolved]
-            # commit: final forward wrote KV for [pending] + block
-            eng.commit(new_cache, 1 + (n - 1))
-            generated.extend(block.tolist())
-            pending = int(block[-1])
-        stats = {
-            "tokens": len(generated),
-            "forwards": n_forwards,
-            "positions": n_positions,
-            "tokens_per_forward": len(generated) / max(n_forwards, 1),
-            "position_utilization": len(generated) / max(n_positions, 1),
-        }
-        return np.asarray(generated[:max_tokens]), stats
+    parallel_width = _block
+
+    def _mask_id(self) -> int:
+        if self.mask_id is not None:
+            return self.mask_id
+        return self.engine.cfg.vocab_size - 1
+
+    def propose(self, context: np.ndarray, pending: int,
+                n: int) -> np.ndarray:
+        return np.full((n,), self._mask_id(), np.int64)
+
+    def resolve(self, pending: int, drafts: np.ndarray
+                ) -> Tuple[List[int], int]:
+        """Iterative refinement: each forward re-predicts the block, the
+        most confident still-masked positions freeze, and the final
+        forward's cache (which saw the fully-resolved block) commits."""
+        n = len(drafts)
+        block = np.asarray(drafts, np.int64).copy()
+        resolved = np.zeros((n,), bool)
+        per_iter = max(1, int(np.ceil(n / self.refine_steps)))
+        step_logits, new_cache = None, None
+        for _ in range(self.refine_steps):
+            if resolved.all():
+                break
+            step_logits, new_cache = self.forward_block(
+                np.concatenate([[pending], block]))
+            lg = np.asarray(step_logits[0].astype(jnp.float32))
+            # position i of the block is predicted by logits row i
+            probs = np.exp(lg - lg.max(-1, keepdims=True))
+            probs /= probs.sum(-1, keepdims=True)
+            conf = probs.max(-1)[:n]
+            preds = probs.argmax(-1)[:n]
+            cand = np.where(~resolved)[0]
+            order = cand[np.argsort(-conf[cand])]
+            pick = order[:per_iter]
+            block[pick] = preds[pick]
+            resolved[pick] = True
+        block[~resolved] = np.asarray(
+            jnp.argmax(step_logits[0], axis=-1))[:n][~resolved]
+        # commit: final forward wrote KV for [pending] + block[:-1]
+        self.engine.commit(new_cache, n)
+        return list(block[:-1]), int(block[-1])

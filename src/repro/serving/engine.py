@@ -17,6 +17,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.arch import ArchConfig
 from repro.core.granularity import GranularitySpec
@@ -62,11 +63,17 @@ class DecodeEngine:
             self.cfg.ffn.n_experts,
             head_dim=(self.cfg.attention.head_dim if self.cfg.attention
                       else 128))
+        # per-slot cache lengths for the scheduler's slotted mode; the
+        # single-request drivers keep using the scalar ``cache_len``
+        self.slot_lens = jnp.zeros((self.batch,), jnp.int32)
 
     # ------------------------------------------------------------------
-    def nfp_budget(self, eps: float = 0.2, routing: str = "balanced") -> int:
+    def nfp_budget(self, eps: float = 0.2, routing: str = "balanced",
+                   ell: Optional[int] = None) -> int:
         """Near-free position budget for the CURRENT state (Sec. 6)."""
-        ell = max(int(self.cache_len), 1)
+        if ell is None:
+            ell = int(self.cache_len)
+        ell = max(int(ell), 1)
         return parallelism_budget(self.cfg, self.hardware, self.gran,
                                   self.batch, ell, eps, routing)
 
@@ -102,6 +109,53 @@ class DecodeEngine:
     def commit(self, new_cache: Dict, n_accepted) -> None:
         self.cache = new_cache
         self.cache_len = self.cache_len + n_accepted
+
+    # ------------------------------------------------------------------
+    # Slotted multi-request mode (repro.serving.scheduler).  Each batch
+    # row is an independent cache slot at its own sequence length; the
+    # scheduler multiplexes requests over slots and the NFP budget over
+    # the per-forward positions.
+    # ------------------------------------------------------------------
+    def _row_mask(self, rows, like: Array) -> Array:
+        m = jnp.zeros((self.batch,), bool).at[jnp.asarray(rows)].set(True)
+        return m.reshape((1, self.batch) + (1,) * (like.ndim - 2))
+
+    def prefill_slot(self, slot: int, prompt: Array) -> Array:
+        """Prefill ONE cache slot with a (p,) prompt; other slots keep
+        their state.  Returns the slot's last-position logits."""
+        toks = jnp.broadcast_to(jnp.asarray(prompt, jnp.int32)[None],
+                                (self.batch, len(prompt)))
+        logits, new_cache = _prefill_fn(self.params, self.cfg, toks,
+                                        self.cache, self.use_kernel)
+        self.cache = jax.tree.map(
+            lambda old, new: jnp.where(self._row_mask([slot], old),
+                                       new, old),
+            self.cache, new_cache)
+        self.slot_lens = self.slot_lens.at[slot].set(len(prompt))
+        return logits[slot, -1]
+
+    def decode_slots(self, tokens: Array) -> Tuple[Array, Dict]:
+        """Multi-position decode forward over ALL slots at their own
+        cache lengths, WITHOUT committing.  tokens: (batch, n)."""
+        return _decode_fn(self.params, self.cfg, tokens, self.cache,
+                          self.slot_lens, self.use_kernel)
+
+    def commit_slots(self, new_cache: Dict, advances) -> None:
+        """Commit per-slot: rows with advance > 0 take the new cache and
+        bump their length; rows with 0 are untouched (inactive slots or
+        fully-rejected blocks)."""
+        adv = jnp.asarray(advances, jnp.int32)
+        mask_rows = [int(i) for i in np.nonzero(np.asarray(advances))[0]]
+        if not mask_rows:
+            return
+        self.cache = jax.tree.map(
+            lambda old, new: jnp.where(self._row_mask(mask_rows, old),
+                                       new, old),
+            self.cache, new_cache)
+        self.slot_lens = self.slot_lens + adv
+
+    def release_slot(self, slot: int) -> None:
+        self.slot_lens = self.slot_lens.at[slot].set(0)
 
     # ------------------------------------------------------------------
     def greedy_generate(self, prompt: Array, steps: int) -> Array:

@@ -5,22 +5,24 @@ A bank of ``n_heads`` lightweight prediction heads (one linear head per
 future offset, trained against shifted targets) proposes the next
 ``n_heads`` tokens from the LAST hidden state; the base model then
 verifies them with ONE multi-position decode forward — identical system
-structure to speculative decoding, but the draft is a model component
-rather than a separate model, so the NFP budget directly caps the useful
-number of MTP heads (paper Sec. 6: "MTP prediction length").
+structure to speculative decoding (the inherited propose -> verify ->
+commit driver), but the draft is a model component rather than a
+separate model, so the NFP budget directly caps the useful number of
+MTP heads (paper Sec. 6: "MTP prediction length").
 
 Greedy acceptance keeps output identical to AR greedy decoding.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import _init
+from repro.serving.algorithm import ParallelDecodeAlgorithm
 from repro.serving.engine import DecodeEngine
 
 Array = jax.Array
@@ -61,7 +63,7 @@ def mtp_loss(heads: Dict, hidden: Array, tokens: Array) -> Array:
 
 
 @dataclass
-class MTPDecoder:
+class MTPDecoder(ParallelDecodeAlgorithm):
     """MTP generation: propose with the head bank, verify with one
     multi-position forward, accept greedily (lossless vs AR greedy)."""
 
@@ -75,37 +77,12 @@ class MTPDecoder:
             return min(self.n_predict, bank)
         return max(1, min(bank, self.engine.nfp_budget() - 1))
 
-    def generate(self, prompt: Array, max_tokens: int
-                 ) -> Tuple[np.ndarray, dict]:
-        eng = self.engine
-        logits = eng.prefill(prompt)
-        pending = int(jnp.argmax(logits[0]))
-        generated: List[int] = [pending]
-        n_forwards = n_positions = 0
+    parallel_width = _n
+
+    def propose(self, context: np.ndarray, pending: int,
+                n: int) -> np.ndarray:
         # hidden state proxy: embed of pending token (heads are trained on
         # hidden states; for the driver demo the embedding row suffices)
-        while len(generated) < max_tokens:
-            n = min(self._n(), max_tokens - len(generated))
-            hid = eng.params["embed"]["table"][jnp.asarray([pending])]
-            drafts = np.asarray(mtp_propose(self.heads, hid))[0][:n]
-            block = np.concatenate([[pending], drafts]).astype(np.int64)
-            toks = jnp.broadcast_to(jnp.asarray(block[None], jnp.int32),
-                                    (eng.batch, len(block)))
-            step_logits, new_cache = eng.peek_step(toks)
-            n_forwards += 1
-            n_positions += len(block)
-            preds = np.asarray(jnp.argmax(step_logits[0], axis=-1))
-            k = 0
-            while k < len(drafts) and preds[k] == drafts[k]:
-                k += 1
-            eng.commit(new_cache, 1 + k)
-            generated.extend(list(drafts[:k]) + [int(preds[k])])
-            pending = int(preds[k])
-        stats = {
-            "tokens": len(generated),
-            "forwards": n_forwards,
-            "positions": n_positions,
-            "tokens_per_forward": len(generated) / max(n_forwards, 1),
-            "position_utilization": len(generated) / max(n_positions, 1),
-        }
-        return np.asarray(generated[:max_tokens]), stats
+        hid = self.engine.params["embed"]["table"][jnp.asarray([pending])]
+        return np.asarray(mtp_propose(self.heads, hid))[0][:n].astype(
+            np.int64)

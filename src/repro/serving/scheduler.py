@@ -1,0 +1,223 @@
+"""Budget-aware continuous-batching scheduler over one DecodeEngine.
+
+The paper's Sec. 6 reads N_max(eps) as a deployment knob: how many
+decode positions one forward can carry near-free.  A single-request
+driver spends that budget on ONE request's verification length / block
+size; the scheduler spends it across MANY concurrent requests — the
+"system-side parallelism selection" the NFP principle enables:
+
+  - each request owns a SLOT (one batch row) of the engine's
+    pre-allocated cache, at its own sequence length (per-slot
+    ``cache_len`` threading through the decode forward),
+  - admission keeps the active set small enough that every request gets
+    at least one position inside the budget; the rest queue,
+  - every scheduler step runs ONE batched multi-position forward whose
+    total positions (active slots x per-request width) never exceed
+    N_max(eps): in ``greedy`` mode width is 1 and the budget caps
+    concurrency; in ``speculative`` mode the remaining budget is split
+    evenly into per-request n-gram verification windows (ASPD-style
+    adaptive splitting), so a lone request gets the whole budget and a
+    full house degrades gracefully to width 1.
+
+Greedy acceptance everywhere: every request's token stream is identical
+to running it alone through ``DecodeEngine.greedy_generate``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import DecodeEngine
+from repro.serving.speculative import ngram_draft
+
+__all__ = ["Request", "ServingLoop"]
+
+
+@dataclass
+class Request:
+    """One generation request and its runtime state."""
+
+    rid: int
+    prompt: np.ndarray                     # (p,) int64
+    max_tokens: int
+    generated: List[int] = field(default_factory=list)
+    pending: Optional[int] = None          # next token to feed (emitted,
+    slot: Optional[int] = None             #   not yet in the cache)
+    done: bool = False
+
+    @property
+    def context(self) -> np.ndarray:
+        """Tokens whose KV is committed in the request's cache slot."""
+        n_cached = len(self.generated) - 1      # all but the pending token
+        return np.concatenate(
+            [self.prompt, self.generated[:n_cached]]).astype(np.int64)
+
+    def tokens(self) -> np.ndarray:
+        return np.asarray(self.generated[:self.max_tokens], np.int64)
+
+
+class ServingLoop:
+    """Multiplex concurrent requests through one shared DecodeEngine.
+
+    The engine's batch dimension is the slot pool.  ``mode``:
+      greedy       1 position per request per forward (lossless,
+                   minimal latency variance),
+      speculative  per-request n-gram drafts sized so the whole forward
+                   stays inside the NFP budget (lossless, higher
+                   throughput when the context has structure).
+    """
+
+    def __init__(self, engine: DecodeEngine, mode: str = "greedy",
+                 eps: float = 0.2, max_width: int = 16):
+        if mode not in ("greedy", "speculative"):
+            raise ValueError(f"unknown serving mode {mode!r}")
+        if engine.use_kernel:
+            import warnings
+            warnings.warn(
+                "per-slot decode has no Pallas kernel path yet; the "
+                "scheduler will use the XLA reference attention",
+                stacklevel=2)
+        self.engine = engine
+        self.mode = mode
+        self.eps = eps
+        self.max_width = max_width
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}            # slot -> request
+        self.free_slots: List[int] = list(range(engine.batch))
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+        # per-step telemetry: (active, width, positions, budget)
+        self.step_log: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_tokens: int) -> Request:
+        prompt = np.asarray(prompt, np.int64).ravel()
+        # reject here, where the caller can handle it per-request — an
+        # admission-time failure would abort every in-flight request.
+        # Speculative forwards run the uniform width over every row, so
+        # a nearly-done row still needs draft headroom in its buffer.
+        headroom = 0 if self.mode == "greedy" else self.max_width
+        if len(prompt) + int(max_tokens) + headroom > self.engine.max_len:
+            raise ValueError(
+                f"request of {len(prompt)} prompt + {max_tokens} tokens "
+                f"(+{headroom} draft headroom) cannot fit "
+                f"max_len={self.engine.max_len}")
+        req = Request(self._next_rid, prompt, int(max_tokens))
+        self._next_rid += 1
+        self.waiting.append(req)
+        return req
+
+    # ------------------------------------------------------------------
+    def budget(self) -> int:
+        """NFP budget at the CURRENT longest active context."""
+        lens = np.asarray(self.engine.slot_lens)
+        ell = int(lens.max()) if lens.size else 1
+        return self.engine.nfp_budget(self.eps, ell=ell)
+
+    def _admit(self) -> None:
+        """Admission: fill free slots while every active request still
+        fits >= 1 position inside the budget."""
+        while (self.waiting and self.free_slots
+               and len(self.active) < max(1, self.budget())):
+            req = self.waiting.popleft()
+            slot = self.free_slots.pop(0)
+            logits = self.engine.prefill_slot(slot, req.prompt)
+            req.pending = int(jnp.argmax(logits))
+            req.generated = [req.pending]
+            req.slot = slot
+            self.active[slot] = req
+
+    def _widths(self, n_active: int, budget: int) -> int:
+        """Split the position budget evenly across active requests."""
+        if self.mode == "greedy":
+            return 1
+        w = max(1, budget // max(n_active, 1))
+        return min(w, self.max_width)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration: admit, one batched forward, per-slot
+        accept/commit, retire finished requests.  Returns False when no
+        work remains."""
+        self._admit()
+        if not self.active:
+            return bool(self.waiting)
+        eng = self.engine
+        budget = self.budget()
+        width = self._widths(len(self.active), budget)
+        slots = sorted(self.active)
+        # --- build the (batch, width) token block ----------------------
+        tokens = np.zeros((eng.batch, width), np.int64)
+        drafts: Dict[int, np.ndarray] = {}
+        for s in slots:
+            req = self.active[s]
+            tokens[s, 0] = req.pending
+            # clip each row's drafts to its remaining tokens — budget
+            # positions past a request's max_tokens would be discarded
+            n_draft = min(width - 1,
+                          req.max_tokens - len(req.generated) - 1)
+            if n_draft > 0:
+                d = ngram_draft(np.append(req.context, req.pending),
+                                n_draft, vocab_size=eng.cfg.vocab_size)
+                drafts[s] = d
+                tokens[s, 1:1 + n_draft] = d
+        self.step_log.append({
+            "active": len(self.active), "width": width,
+            "positions": len(self.active) * width, "budget": budget,
+        })
+        # --- one shared multi-position forward -------------------------
+        logits, new_cache = eng.decode_slots(jnp.asarray(tokens, jnp.int32))
+        preds = np.asarray(jnp.argmax(logits, axis=-1))     # (batch, width)
+        # --- per-slot greedy acceptance + commit -----------------------
+        advances = np.zeros((eng.batch,), np.int32)
+        for s in slots:
+            req = self.active[s]
+            k = 0
+            d = drafts.get(s)
+            if d is not None:
+                while k < len(d) and preds[s, k] == d[k]:
+                    k += 1
+                req.generated.extend(int(t) for t in d[:k])
+            bonus = int(preds[s, k])
+            req.generated.append(bonus)
+            advances[s] = 1 + k                  # pending + accepted drafts
+            req.pending = bonus
+        eng.commit_slots(new_cache, advances)
+        # --- retire ----------------------------------------------------
+        for s in slots:
+            req = self.active[s]
+            if len(req.generated) >= req.max_tokens:
+                req.done = True
+                self.finished[req.rid] = req
+                del self.active[s]
+                eng.release_slot(s)
+                self.free_slots.append(s)
+        return bool(self.active or self.waiting)
+
+    # ------------------------------------------------------------------
+    def run(self) -> Dict[int, np.ndarray]:
+        """Serve until the queue drains; returns {rid: tokens}."""
+        while self.step():
+            pass
+        return {rid: req.tokens() for rid, req in
+                sorted(self.finished.items())}
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict:
+        total_tokens = sum(len(r.tokens()) for r in self.finished.values())
+        total_positions = sum(e["positions"] for e in self.step_log)
+        forwards = len(self.step_log)
+        return {
+            "requests": len(self.finished),
+            "tokens": total_tokens,
+            "forwards": forwards,
+            "positions": total_positions,
+            "tokens_per_forward": total_tokens / max(forwards, 1),
+            "position_utilization": total_tokens / max(total_positions, 1),
+            "max_positions_per_forward": max(
+                (e["positions"] for e in self.step_log), default=0),
+        }

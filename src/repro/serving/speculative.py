@@ -8,18 +8,22 @@ past N_max(eps) buys tokens at super-linear latency cost.
 
 Two draft sources:
   - ngram: suffix-match lookup in the already-generated context (free),
-  - draft engine: a second (smaller) DecodeEngine.
+  - draft engine: a second (smaller) DecodeEngine, kept cache-coherent
+    with the committed stream by rolling accepted tokens forward (the
+    catch-up tokens ride in the same decode forward that starts the
+    next draft, so resync costs no extra forwards).
 Greedy acceptance keeps the output identical to AR greedy decoding.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.algorithm import ParallelDecodeAlgorithm
 from repro.serving.engine import DecodeEngine
 
 Array = jax.Array
@@ -49,10 +53,10 @@ def ngram_draft(context: np.ndarray, gamma: int, max_order: int = 3,
 
 
 @dataclass
-class SpeculativeDecoder:
+class SpeculativeDecoder(ParallelDecodeAlgorithm):
     engine: DecodeEngine
     draft_engine: Optional[DecodeEngine] = None
-    gamma: Optional[int] = None        # verification length; None -> NFP budget
+    gamma: Optional[int] = None        # verification length; None -> NFP
 
     def _gamma(self) -> int:
         if self.gamma is not None:
@@ -60,57 +64,52 @@ class SpeculativeDecoder:
         # NFP budget covers the whole forward: gamma drafts + 1 pending
         return max(1, self.engine.nfp_budget() - 1)
 
-    def _propose(self, context: np.ndarray, pending: int, gamma: int
-                 ) -> np.ndarray:
-        if self.draft_engine is not None:
-            toks = []
-            last = jnp.full((self.engine.batch, 1), pending, jnp.int32)
-            for _ in range(gamma):
-                logits = self.draft_engine.decode_step(last)
-                last = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-                toks.append(int(last[0, 0]))
-            return np.asarray(toks, np.int64)
-        return ngram_draft(np.append(context, pending), gamma,
-                           vocab_size=self.engine.cfg.vocab_size)
+    parallel_width = _gamma
 
-    def generate(self, prompt: Array, max_tokens: int
-                 ) -> Tuple[np.ndarray, dict]:
-        """Greedy speculative generation (batch=1 driver).  Returns
-        (tokens, stats) — stats includes positions/forward utilization,
-        the quantity NFP normalizes (paper Sec. J.2.3)."""
-        eng = self.engine
-        logits = eng.prefill(prompt)
-        pending = int(jnp.argmax(logits[0]))
-        context = np.asarray(prompt[0])
-        generated: List[int] = [pending]
-        n_forwards, n_positions = 0, 0
-        while len(generated) < max_tokens:
-            gamma = min(self._gamma(), max_tokens - len(generated))
-            drafts = self._propose(context, pending, gamma)
-            block = np.concatenate([[pending], drafts]).astype(np.int64)
-            toks = jnp.asarray(block[None], jnp.int32)
-            toks = jnp.broadcast_to(toks, (eng.batch, toks.shape[1]))
-            step_logits, new_cache = eng.peek_step(toks)
-            n_forwards += 1
-            n_positions += len(block)
-            preds = np.asarray(jnp.argmax(step_logits[0], axis=-1))
-            k = 0
-            while k < gamma and preds[k] == drafts[k]:
-                k += 1
-            accepted = list(drafts[:k])
-            bonus = int(preds[k])
-            eng.commit(new_cache, 1 + k)
-            if self.draft_engine is not None:
-                # resync draft cache: simplest policy, re-prefill lazily
-                self.draft_engine.cache_len = eng.cache_len
-            context = np.concatenate([context, [pending], accepted])
-            generated.extend(accepted + [bonus])
-            pending = bonus
-        stats = {
-            "tokens": len(generated),
-            "forwards": n_forwards,
-            "positions": n_positions,
-            "tokens_per_forward": len(generated) / max(n_forwards, 1),
-            "position_utilization": len(generated) / max(n_positions, 1),
-        }
-        return np.asarray(generated[:max_tokens]), stats
+    # ------------------------------------------------------------------
+    def begin(self, prompt: np.ndarray, pending: int) -> None:
+        if self.draft_engine is not None:
+            self.draft_engine.prefill(jnp.asarray(prompt, jnp.int32))
+            # tokens whose KV the draft cache holds, in stream order
+            self._draft_tokens: List[int] = [int(t) for t in prompt[0]]
+
+    def _draft_propose(self, full: np.ndarray, gamma: int) -> np.ndarray:
+        """Draft gamma tokens, first resyncing the draft KV cache.
+
+        ``full`` is the canonical stream (committed context + pending).
+        The draft cache holds KV for ``self._draft_tokens``; the shared
+        prefix stays, the divergent tail (rejected drafts) is dropped by
+        truncating cache_len, and the missing tokens — at minimum the
+        pending token, plus any accepted-but-unseen drafts — are fed in
+        ONE multi-position catch-up forward whose last logits already
+        give the first draft."""
+        draft = self.draft_engine
+        sync = 0
+        for a, b in zip(self._draft_tokens, full):
+            if a != int(b):
+                break
+            sync += 1
+        draft.cache_len = jnp.asarray(sync, jnp.int32)
+        self._draft_tokens = self._draft_tokens[:sync]
+        chunk = np.asarray(full[sync:], np.int64)       # >= 1: pending is new
+        toks = jnp.broadcast_to(jnp.asarray(chunk[None], jnp.int32),
+                                (draft.batch, len(chunk)))
+        logits = draft.decode_step(toks)
+        self._draft_tokens.extend(int(t) for t in chunk)
+        out = []
+        last = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        for _ in range(gamma):
+            out.append(int(last[0, 0]))
+            if len(out) == gamma:
+                break
+            logits = draft.decode_step(last.astype(jnp.int32))
+            self._draft_tokens.append(out[-1])
+            last = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return np.asarray(out, np.int64)
+
+    def propose(self, context: np.ndarray, pending: int,
+                n: int) -> np.ndarray:
+        full = np.append(context, pending)
+        if self.draft_engine is not None:
+            return self._draft_propose(full, n)
+        return ngram_draft(full, n, vocab_size=self.engine.cfg.vocab_size)

@@ -1,0 +1,99 @@
+"""Sharding rules: pspec assignment, divisibility fallbacks, policies.
+
+Pure pspec logic — runs against a duck-typed mesh (axis sizes only), so
+no placeholder-device process isolation is needed."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import (batch_pspec, cache_pspecs, mesh_axes,
+                                 opt_pspecs, param_pspecs)
+from repro.models.transformer import init_cache, init_model
+from repro.training import init_opt_state
+
+
+class FakeMesh:
+    def __init__(self, shape_map):
+        self.axis_names = tuple(shape_map)
+        self.shape = dict(shape_map)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.fixture(scope="module")
+def params_sds():
+    cfg = get_config("stablelm_3b")            # full size: divisible dims
+    key = jax.random.PRNGKey(0)
+    return cfg, jax.eval_shape(lambda k: init_model(k, cfg), key)
+
+
+def test_mesh_axes():
+    assert mesh_axes(SINGLE) == ("data", "model")
+    assert mesh_axes(MULTI) == (("pod", "data"), "model")
+
+
+def test_batch_pspec_divisibility():
+    assert batch_pspec(SINGLE, 64) == P("data", None)
+    assert batch_pspec(SINGLE, 8) == P(None, None)       # 8 % 16 != 0
+    assert batch_pspec(MULTI, 64) == P(("pod", "data"), None)
+    assert batch_pspec(MULTI, 2) == P("pod", None)       # partial use
+    assert batch_pspec(SINGLE, 256, include_model=True) == \
+        P(("data", "model"), None)
+
+
+def test_param_pspecs_roles(params_sds):
+    cfg, params = params_sds
+    ps = param_pspecs(params, SINGLE, policy="tp_only")
+    seg0 = ps["segments"][0]
+    # column-parallel: output dim; row-parallel: input dim; norms replicated
+    assert seg0["attn"]["wq"][-1] == "model"
+    assert seg0["attn"]["wo"][-2] == "model"
+    assert seg0["ffn"]["up"][-1] == "model"
+    assert seg0["ffn"]["down"][-2] == "model"
+    assert all(d is None for d in seg0["ln1"]["scale"])
+
+
+def test_param_pspecs_policies(params_sds):
+    cfg, params = params_sds
+    dp = param_pspecs(params, SINGLE, policy="dp_only")
+    assert all(all(d is None for d in p)
+               for p in jax.tree.leaves(dp, is_leaf=lambda x: isinstance(x, P)))
+    fsdp = param_pspecs(params, SINGLE, policy="fsdp")
+    wq = fsdp["segments"][0]["attn"]["wq"]
+    assert "model" in wq and any(d == "data" for d in wq)
+    with pytest.raises(ValueError):
+        param_pspecs(params, SINGLE, policy="zigzag")
+
+
+def test_param_pspecs_respect_divisibility():
+    # a dim not divisible by the axis size must stay unsharded
+    params = {"wq": jax.ShapeDtypeStruct((100, 30), jnp.float32)}
+    ps = param_pspecs(params, SINGLE, policy="tp_only")
+    assert ps["wq"] == P(None, None)
+
+
+def test_opt_pspecs_mirror_and_step(params_sds):
+    cfg, params = params_sds
+    p_ps = param_pspecs(params, SINGLE, policy="fsdp")
+    opt = jax.eval_shape(init_opt_state, params)
+    o_ps = opt_pspecs(opt, p_ps)
+    assert o_ps["step"] == P()
+    assert (o_ps["m"]["segments"][0]["attn"]["wq"]
+            == p_ps["segments"][0]["attn"]["wq"])
+
+
+def test_cache_pspecs_modes(params_sds):
+    cfg, _ = params_sds
+    cache = jax.eval_shape(lambda: init_cache(cfg, 64, 4096))
+    head = cache_pspecs(cache, SINGLE, 64, mode="head")
+    seq = cache_pspecs(cache, SINGLE, 64, mode="seq")
+    k_head = head["segments"][0]["k"]          # (L, b, s, kv_heads, dh)
+    k_seq = seq["segments"][0]["k"]
+    assert k_head[1] == "data"
+    assert k_seq[2] == "model" and ("model" not in tuple(k_head)[2:3])
+    with pytest.raises(ValueError):
+        cache_pspecs(cache, SINGLE, 64, mode="paged")
