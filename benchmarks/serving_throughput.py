@@ -5,10 +5,19 @@ concurrent requests (greedy and speculative split modes) on the reduced
 CPU config.  The headline: positions per forward grow with concurrency
 but stay inside N_max(eps), so batched serving rides the near-free
 region — throughput scales with concurrency while per-forward latency
-stays near the baseline.  Pushing past the budget (--over) shows the
-other side of the boundary.
+stays near the baseline.
 
-Run:  PYTHONPATH=src python -m benchmarks.serving_throughput
+With --kernel (serve through the Pallas ragged decode-attention path)
+each row also carries that path's measured kernel-granularity slack
+(mean query-row utilization inside the q_block tile, mean kv-tile
+utilization, kv tiles skipped by the per-row ragged bounds) next to the
+``core.nfp`` prediction (M_attn = the q_block): row_util ~= positions /
+(slots * M_attn) is the paper's granularity-slack mechanism observed
+per serving step.  Without --kernel the XLA reference path runs and no
+slack columns are emitted (there is no tiling to measure).
+
+Run:  PYTHONPATH=src python -m benchmarks.serving_throughput --kernel
+      (interpret mode on CPU — slower, identical tokens)
 """
 from __future__ import annotations
 
@@ -30,9 +39,11 @@ TOKENS = 24
 MAX_LEN = 256
 
 
-def _run_once(cfg, params, n_requests: int, mode: str, max_width: int):
+def _run_once(cfg, params, n_requests: int, mode: str, max_width: int,
+              use_kernel: bool):
     slots = min(n_requests, 8)
-    eng = DecodeEngine(cfg, params, batch=slots, max_len=MAX_LEN)
+    eng = DecodeEngine(cfg, params, batch=slots, max_len=MAX_LEN,
+                       use_kernel=use_kernel)
     loop = ServingLoop(eng, mode=mode, max_width=max_width)
     for i in range(n_requests):
         prompt = np.asarray(jax.random.randint(
@@ -40,36 +51,48 @@ def _run_once(cfg, params, n_requests: int, mode: str, max_width: int):
         loop.submit(prompt, TOKENS)
     t0 = time.time()
     loop.run()
-    return loop.stats(), time.time() - t0
+    return loop, loop.stats(), time.time() - t0
 
 
-def _serve(cfg, params, n_requests: int, mode: str, max_width: int = 8):
+def _serve(cfg, params, n_requests: int, mode: str, max_width: int = 8,
+           use_kernel: bool = False):
     # warmup pass: compiles every (batch, width) bucket this workload
     # hits (the module-level jit cache persists across engines), so the
     # timed pass below measures serving, not XLA compilation
-    _run_once(cfg, params, n_requests, mode, max_width)
-    return _run_once(cfg, params, n_requests, mode, max_width)
+    _run_once(cfg, params, n_requests, mode, max_width, use_kernel)
+    return _run_once(cfg, params, n_requests, mode, max_width, use_kernel)
 
 
-def run(modes=("greedy", "speculative")) -> None:
+def run(modes=("greedy", "speculative"), use_kernel: bool = False) -> None:
     cfg = get_config(ARCH, reduced=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
     for mode in modes:
         for n_req in (1, 2, 4, 8):
-            stats, dt = _serve(cfg, params, n_req, mode)
+            loop, stats, dt = _serve(cfg, params, n_req, mode,
+                                     use_kernel=use_kernel)
             tput = stats["tokens"] / max(dt, 1e-9)
             us_fwd = dt / max(stats["forwards"], 1) * 1e6
+            m_attn = loop.engine.gran.m_attn           # the NFP prediction
+            slack = ""
+            if "mean_kv_tile_util" in stats:
+                slack = (f";m_attn={m_attn}"
+                         f";row_util={stats['mean_attn_row_util']:.4f}"
+                         f";tile_util={stats['mean_kv_tile_util']:.3f}"
+                         f";tiles_skipped={stats['kv_tiles_skipped']}")
             emit(f"serving_throughput/{mode}/req{n_req}", us_fwd,
                  f"tok_s={tput:.1f};tok_fwd={stats['tokens_per_forward']:.2f};"
-                 f"max_pos={stats['max_positions_per_forward']}")
+                 f"max_pos={stats['max_positions_per_forward']}" + slack)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--modes", default="greedy,speculative")
+    ap.add_argument("--kernel", action="store_true",
+                    help="serve through the Pallas ragged decode kernel "
+                         "(interpret mode on CPU)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(tuple(args.modes.split(",")))
+    run(tuple(args.modes.split(",")), use_kernel=args.kernel)
 
 
 if __name__ == "__main__":

@@ -1,42 +1,60 @@
-"""jit'd wrapper: layout prep + query-tile padding (the M_attn mechanism).
+"""jit'd wrappers: layout prep + query-tile padding (the M_attn mechanism).
 
-``decode_attention`` pads the logical N query rows up to the selected
-q_block before launching the kernel — physical work therefore changes only
-at tile boundaries (paper Eq. 33-34), which is exactly the granularity the
-NFP predictor reads from ``core.granularity``.
+``decode_attention_ragged`` is the kernel entry the serving scheduler
+uses: ``cache_lens`` is a (b,) vector of per-slot committed lengths, so
+mixed-length slots share ONE quantized kernel launch.  The logical N
+query rows are padded up to the selected q_block before launch — physical
+work therefore changes only at tile boundaries (paper Eq. 33-34), which
+is exactly the granularity the NFP predictor reads from
+``core.granularity``.  ``decode_attention`` keeps the original aligned
+(scalar ``total_len``) signature and is a broadcast of the ragged path.
+
+``slack_report`` models the kernel's physical work for one forward in
+plain numpy — useful vs padded query rows, and executed vs grid kv tiles
+under the kernel's per-row skip rule — so serving telemetry can place
+MEASURED per-step granularity slack next to the ``core.nfp`` prediction.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.granularity import round_up, select_q_block
+from repro.core.granularity import cdiv, round_up, select_q_block
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 
 K_BLOCK = 128
 
 
 @functools.partial(jax.jit, static_argnames=("window", "q_block_override",
-                                             "interpret"))
-def decode_attention(q, k_cache, v_cache, total_len, *,
-                     window: Optional[int] = None,
-                     q_block_override: Optional[int] = None,
-                     interpret: bool = True):
-    """q: (b, n, h, dh); k/v_cache: (b, s, kv, dh); total_len = cache_len + n.
+                                             "k_block", "interpret"))
+def decode_attention_ragged(q, k_cache, v_cache, cache_lens, *,
+                            window: Optional[int] = None,
+                            q_block_override: Optional[int] = None,
+                            k_block: int = K_BLOCK,
+                            interpret: Optional[bool] = None):
+    """q: (b, n, h, dh); k/v_cache: (b, s, kv, dh); cache_lens: (b,) i32.
 
-    Returns (b, n, h, dh).  interpret=True validates the TPU kernel body on
-    CPU; on real TPU pass interpret=False.
+    Row b's N query positions sit at cache_lens[b] .. cache_lens[b]+N-1
+    (their K/V already written into the cache at those offsets).  A scalar
+    ``cache_lens`` broadcasts to the aligned case.  Returns (b, n, h, dh).
+
+    interpret=None (the default) compiles the kernel on TPU and runs the
+    Pallas interpreter elsewhere (CPU validation), so engine/scheduler
+    callers need no threading; pass True/False to force either.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, n, h, dh = q.shape
     s = k_cache.shape[1]
     kv = k_cache.shape[2]
     g = h // kv
     q_block = q_block_override or select_q_block(n, dh)
     n_pad = round_up(n, q_block)
-    s_pad = round_up(s, K_BLOCK)
+    s_pad = round_up(s, k_block)
     scale = 1.0 / (dh ** 0.5)
 
     qk = q.reshape(b, n, kv, g, dh).transpose(0, 2, 3, 1, 4)   # (b,kv,g,n,dh)
@@ -45,9 +63,99 @@ def decode_attention(q, k_cache, v_cache, total_len, *,
                  ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
     vk = jnp.pad(v_cache.transpose(0, 2, 1, 3),
                  ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
-    cache_len = jnp.asarray(total_len - n, jnp.int32).reshape(1)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_lens, jnp.int32).reshape(-1), (b,))
 
-    o = decode_attention_pallas(qk, kk, vk, cache_len, q_block=q_block,
-                                k_block=K_BLOCK, scale=scale, window=window,
-                                interpret=interpret)
+    o = decode_attention_pallas(qk, kk, vk, lens, q_block=q_block,
+                                k_block=k_block, scale=scale, window=window,
+                                n_logical=n, interpret=interpret)
     return o[:, :, :, :n].transpose(0, 3, 1, 2, 4).reshape(b, n, h, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "q_block_override",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, total_len, *,
+                     window: Optional[int] = None,
+                     q_block_override: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Aligned-rows entry: q: (b, n, h, dh); total_len = cache_len + n
+    (scalar, every row at the same position).  See decode_attention_ragged.
+    """
+    n = q.shape[1]
+    cache_len = jnp.asarray(total_len - n, jnp.int32).reshape(())
+    return decode_attention_ragged(
+        q, k_cache, v_cache, cache_len, window=window,
+        q_block_override=q_block_override, interpret=interpret)
+
+
+def slack_report(n: int, cache_lens, s_max: int, *,
+                 head_dim: int = 128,
+                 q_block: Optional[int] = None,
+                 k_block: int = K_BLOCK,
+                 window: Optional[int] = None,
+                 active=None) -> Dict[str, float]:
+    """Model one ragged decode forward's physical work (per kv head).
+
+    Mirrors the kernel's skip rule exactly: for batch row b and q tile iq,
+    kv tile ij executes iff
+        ij*k_block < len_b + min(n, (iq+1)*q_block)              (upper)
+        and, with a window, ij*k_block + k_block - 1 >=
+            len_b + iq*q_block - window + 1                      (lower)
+
+    Args:
+      n:          logical query positions per row this forward.
+      cache_lens: (b,) committed lengths (the scheduler's slot_lens).
+      s_max:      allocated cache length (sets the full kv grid).
+      active:     optional (b,) bool — rows carrying real requests.  Rows
+                  outside it still execute (the kernel runs the whole
+                  batch) but count as pure slack.
+
+    Returns a dict:
+      rows_logical / rows_physical / row_utilization   — query-row padding
+      kv_tiles_useful    — executed tiles on active rows (ideal work)
+      kv_tiles_executed  — tiles the ragged kernel runs (after skips)
+      kv_tiles_grid      — tiles a non-ragged scalar-length kernel runs
+      kv_tile_utilization = useful / executed
+      kv_tiles_skipped    = grid - executed (the ragged win)
+    """
+    lens = np.asarray(cache_lens, np.int64).ravel()
+    b = lens.size
+    act = (np.ones(b, bool) if active is None
+           else np.asarray(active, bool).ravel())
+    qb = q_block or select_q_block(n, head_dim)
+    n_pad = round_up(n, qb)
+    n_q_tiles = n_pad // qb
+    s_pad = round_up(s_max, k_block)
+    n_kv_tiles = s_pad // k_block
+
+    executed = 0
+    useful = 0
+    for bi in range(b):
+        for iq in range(n_q_tiles):
+            hi = lens[bi] + min(n, (iq + 1) * qb)        # kv end (exclusive)
+            tiles = min(n_kv_tiles, cdiv(int(hi), k_block))
+            lo_tile = 0
+            if window is not None:
+                # first tile whose last kv position reaches lo_visible —
+                # same floor-div the kernel's kv_index clamp uses
+                lo_visible = lens[bi] + iq * qb - window + 1
+                lo_tile = max(0, int(lo_visible) // k_block)
+            t = max(0, tiles - lo_tile)
+            executed += t
+            if act[bi]:
+                useful += t
+
+    rows_logical = int(act.sum()) * n
+    rows_physical = b * n_pad
+    grid = b * n_q_tiles * n_kv_tiles
+    return {
+        "n": n, "q_block": qb, "k_block": k_block,
+        "rows_logical": rows_logical,
+        "rows_physical": rows_physical,
+        "row_utilization": rows_logical / max(rows_physical, 1),
+        "kv_tiles_useful": useful,
+        "kv_tiles_executed": executed,
+        "kv_tiles_grid": grid,
+        "kv_tile_utilization": useful / max(executed, 1),
+        "kv_tiles_skipped": grid - executed,
+    }

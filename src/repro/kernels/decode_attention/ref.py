@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for multi-position decode attention."""
+"""Pure-jnp oracle for multi-position decode attention (aligned + ragged)."""
 from __future__ import annotations
 
 from typing import Optional
@@ -9,25 +9,29 @@ import jax.numpy as jnp
 
 def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
                          window: Optional[int] = None):
-    """q: (b, n, h, dh); k/v_cache: (b, s, kv, dh); cache_len: int/scalar.
+    """q: (b, n, h, dh); k/v_cache: (b, s, kv, dh); cache_len: scalar or (b,).
 
-    The N query positions sit at global positions cache_len..cache_len+N-1
-    (their K/V already written into the cache).  Returns (b, n, h, dh).
+    The N query positions of row b sit at global positions
+    cache_len[b] .. cache_len[b]+N-1 (their K/V already written into the
+    cache).  A scalar ``cache_len`` is the aligned case; a (b,) vector is
+    the scheduler's ragged per-slot case.  Returns (b, n, h, dh).
     """
     b, n, h, dh = q.shape
     s = k_cache.shape[1]
     kv = k_cache.shape[2]
     g = h // kv
     scale = 1.0 / (dh ** 0.5)
-    q_pos = cache_len + jnp.arange(n, dtype=jnp.int32)          # (n,)
-    kv_pos = jnp.arange(s, dtype=jnp.int32)                     # (s,)
-    mask = kv_pos[None, :] <= q_pos[:, None]
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    q_pos = lens[:, None] + jnp.arange(n, dtype=jnp.int32)[None]     # (b, n)
+    kv_pos = jnp.arange(s, dtype=jnp.int32)                          # (s,)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]                # (b,n,s)
     if window is not None:
-        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+        mask &= kv_pos[None, None, :] > (q_pos[:, :, None] - window)
     qg = q.reshape(b, n, kv, g, dh)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache)
     scores = scores.astype(jnp.float32) * scale
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_cache)
     return ctx.reshape(b, n, h, dh)

@@ -9,7 +9,11 @@ Three execution modes:
 The decode path can route the attention core through the Pallas
 query-tiled kernel (``repro.kernels.decode_attention``) whose q-block IS
 the M_attn granularity of the NFP principle; the default XLA path is the
-semantically identical reference.
+semantically identical reference.  The kernel serves BOTH cache layouts:
+a scalar ``cache_len`` (single-request drivers, aligned rows) and a (b,)
+vector (the scheduler's slotted cache) go through the same ragged
+entry — per-row lengths ride the kernel's scalar-prefetch lane, so
+mixed-length slots share one quantized launch.
 """
 from __future__ import annotations
 
@@ -181,10 +185,14 @@ def gqa_decode(params, a: AttentionSpec, x: Array, cache: Dict,
                               (b, s_max))
     window = a.window if a.kind == "swa" else None
     scale = 1.0 / (a.head_dim ** 0.5)
-    if use_kernel and not per_row:
-        from repro.kernels.decode_attention.ops import decode_attention
-        ctx = decode_attention(q, k_cache, v_cache, cache_len + n,
-                               window=window)
+    if use_kernel:
+        # Ragged per-slot fast path: the (b,) offsets vector goes straight
+        # into the kernel's scalar-prefetch lane, so scheduler-slotted
+        # batches (each row at its own length) share one quantized launch;
+        # the scalar case is the same kernel with aligned rows.
+        from repro.kernels.decode_attention.ops import decode_attention_ragged
+        ctx = decode_attention_ragged(q, k_cache, v_cache, offsets,
+                                      window=window)
     else:
         mask = _causal_mask(q_pos, kv_pos, window)
         ctx = _gqa_core(q, k_cache, v_cache, mask, scale)

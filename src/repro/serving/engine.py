@@ -136,7 +136,11 @@ class DecodeEngine:
 
     def decode_slots(self, tokens: Array) -> Tuple[Array, Dict]:
         """Multi-position decode forward over ALL slots at their own
-        cache lengths, WITHOUT committing.  tokens: (batch, n)."""
+        cache lengths, WITHOUT committing.  tokens: (batch, n).
+
+        With ``use_kernel=True`` the per-slot lengths ride the ragged
+        Pallas decode-attention kernel's scalar-prefetch lane — one
+        quantized launch for the whole mixed-length batch."""
         return _decode_fn(self.params, self.cfg, tokens, self.cache,
                           self.slot_lens, self.use_kernel)
 

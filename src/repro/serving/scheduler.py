@@ -31,6 +31,7 @@ from typing import Deque, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.decode_attention.ops import slack_report
 from repro.serving.engine import DecodeEngine
 from repro.serving.speculative import ngram_draft
 
@@ -75,12 +76,6 @@ class ServingLoop:
                  eps: float = 0.2, max_width: int = 16):
         if mode not in ("greedy", "speculative"):
             raise ValueError(f"unknown serving mode {mode!r}")
-        if engine.use_kernel:
-            import warnings
-            warnings.warn(
-                "per-slot decode has no Pallas kernel path yet; the "
-                "scheduler will use the XLA reference attention",
-                stacklevel=2)
         self.engine = engine
         self.mode = mode
         self.eps = eps
@@ -90,7 +85,10 @@ class ServingLoop:
         self.free_slots: List[int] = list(range(engine.batch))
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
-        # per-step telemetry: (active, width, positions, budget)
+        # per-step telemetry: active/width/positions/budget plus, when
+        # serving through the kernel path, its measured granularity slack
+        # (attn_row_util, kv_tiles_executed/grid/skipped, kv_tile_util) —
+        # the measured counterpart of the core.nfp M_attn prediction
         self.step_log: List[Dict] = []
 
     # ------------------------------------------------------------------
@@ -138,6 +136,25 @@ class ServingLoop:
         w = max(1, budget // max(n_active, 1))
         return min(w, self.max_width)
 
+    def _attn_slack(self, width: int) -> Optional[Dict]:
+        """Model this forward's kernel-granularity slack: the ragged decode
+        kernel's physical query rows / kv tiles vs the useful work of the
+        active slots (``ops.slack_report`` mirrors the kernel's per-row
+        tile-skip rule exactly).  None when the engine runs the XLA
+        reference path (nothing is tiled, so reporting tile slack would
+        fabricate a measurement) or for archs the kernel doesn't serve
+        (MLA / attention-free)."""
+        a = self.engine.cfg.attention
+        if not self.engine.use_kernel or a is None or a.kind == "mla":
+            return None
+        active = np.zeros(self.engine.batch, bool)
+        active[list(self.active)] = True
+        return slack_report(
+            width, np.asarray(self.engine.slot_lens), self.engine.max_len,
+            head_dim=a.head_dim,
+            window=a.window if a.kind == "swa" else None,
+            active=active)
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One scheduler iteration: admit, one batched forward, per-slot
@@ -165,10 +182,21 @@ class ServingLoop:
                                 n_draft, vocab_size=eng.cfg.vocab_size)
                 drafts[s] = d
                 tokens[s, 1:1 + n_draft] = d
-        self.step_log.append({
+        entry = {
             "active": len(self.active), "width": width,
             "positions": len(self.active) * width, "budget": budget,
-        })
+        }
+        slack = self._attn_slack(width)
+        if slack is not None:
+            entry.update({
+                "attn_rows_physical": slack["rows_physical"],
+                "attn_row_util": slack["row_utilization"],
+                "kv_tiles_executed": slack["kv_tiles_executed"],
+                "kv_tiles_grid": slack["kv_tiles_grid"],
+                "kv_tiles_skipped": slack["kv_tiles_skipped"],
+                "kv_tile_util": slack["kv_tile_utilization"],
+            })
+        self.step_log.append(entry)
         # --- one shared multi-position forward -------------------------
         logits, new_cache = eng.decode_slots(jnp.asarray(tokens, jnp.int32))
         preds = np.asarray(jnp.argmax(logits, axis=-1))     # (batch, width)
@@ -211,7 +239,7 @@ class ServingLoop:
         total_tokens = sum(len(r.tokens()) for r in self.finished.values())
         total_positions = sum(e["positions"] for e in self.step_log)
         forwards = len(self.step_log)
-        return {
+        out = {
             "requests": len(self.finished),
             "tokens": total_tokens,
             "forwards": forwards,
@@ -221,3 +249,14 @@ class ServingLoop:
             "max_positions_per_forward": max(
                 (e["positions"] for e in self.step_log), default=0),
         }
+        slacked = [e for e in self.step_log if "kv_tile_util" in e]
+        if slacked:
+            out["mean_attn_row_util"] = (
+                sum(e["attn_row_util"] for e in slacked) / len(slacked))
+            out["mean_kv_tile_util"] = (
+                sum(e["kv_tile_util"] for e in slacked) / len(slacked))
+            out["kv_tiles_skipped"] = sum(
+                e["kv_tiles_skipped"] for e in slacked)
+            out["kv_tiles_executed"] = sum(
+                e["kv_tiles_executed"] for e in slacked)
+        return out

@@ -9,6 +9,10 @@ import sys
 
 import pytest
 
+# 8-device shard_map subprocess — by far the suite's longest setup
+# (minutes of XLA host-platform compilation); nightly lane
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'

@@ -10,6 +10,9 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config
+
+# full-model integration sweep over every arch — the nightly lane's job
+pytestmark = pytest.mark.slow
 from repro.models import forward, init_cache, init_model
 from repro.training import AdamWConfig, init_opt_state, make_train_step
 

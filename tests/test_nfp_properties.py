@@ -1,0 +1,154 @@
+"""Hypothesis property tests for ``core/nfp.py`` (Eqs. 5-14).
+
+Three families the paper's algebra promises for ALL inputs, not just the
+Table-24 points that ``test_nfp_core`` pins:
+  - AI curves are monotone non-decreasing in N (more positions per
+    forward never lowers arithmetic intensity),
+  - idle boundaries scale with rho (a roofline with more FLOPs per byte
+    tolerates more positions; dense is exactly linear in rho),
+  - each principle (Eq. 12 dense, Eq. 13 MoE balanced, Eq. 14 MoE
+    skewed) equals the min of its terms and is attained by the
+    first-exiting module (``limiting`` names the argmin).
+
+Runs under real hypothesis when installed, or the deterministic
+``tests/conftest.py`` fallback sweep otherwise.
+"""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GranularitySpec, H20, TPU_V5E, ai_attn, ai_dense,
+                        ai_moe, n_idle_attn, n_idle_dense, n_idle_moe,
+                        predict_dense, predict_model, predict_moe_balanced,
+                        predict_moe_skewed)
+from repro.core.hardware import HardwareSpec
+
+G256 = GranularitySpec.for_backend(n_experts=256)
+
+
+def _hw(rho: float) -> HardwareSpec:
+    """A synthetic roofline at the given FLOPs/byte balance point."""
+    return HardwareSpec(name=f"synth{rho:g}", phi=rho * 1e12, beta=1e12)
+
+
+# ===========================================================================
+# AI curves monotone in N
+# ===========================================================================
+
+class TestAIMonotoneInN:
+    @given(n=st.integers(1, 4096), b=st.integers(1, 64))
+    @settings(max_examples=100, deadline=None)
+    def test_dense(self, n, b):
+        assert ai_dense(n + 1, b) >= ai_dense(n, b)
+
+    @given(n=st.integers(1, 4096), ell=st.integers(1, 65536))
+    @settings(max_examples=100, deadline=None)
+    def test_attn(self, n, ell):
+        assert ai_attn(n + 1, ell) >= ai_attn(n, ell)
+
+    @given(n=st.integers(1, 4096), b=st.integers(1, 16),
+           k=st.sampled_from([1, 2, 8, 32]),
+           d_ff=st.sampled_from([128, 512, 2048]))
+    @settings(max_examples=100, deadline=None)
+    def test_moe(self, n, b, k, d_ff):
+        assert ai_moe(n + 1, b, k, 256, d_ff) >= ai_moe(n, b, k, 256, d_ff)
+
+    @given(n=st.integers(1, 4096), ell=st.integers(1, 65536))
+    @settings(max_examples=50, deadline=None)
+    def test_attn_ai_saturates_at_2l_over_s(self, n, ell):
+        # Eq. 21: AI(N) = 2NL/((L+N)s) < 2L/s for every N — the context
+        # length caps attention intensity no matter the parallelism (the
+        # paper's memory-bound slack source)
+        assert ai_attn(n, ell) < 2.0 * ell / 2.0      # s = 2 bytes (bf16)
+
+
+# ===========================================================================
+# Idle boundaries scale with rho
+# ===========================================================================
+
+class TestIdleScalesWithRho:
+    @given(rho=st.floats(10.0, 1000.0), c=st.floats(1.1, 8.0),
+           b=st.integers(1, 64))
+    @settings(max_examples=100, deadline=None)
+    def test_dense_linear_in_rho(self, rho, c, b):
+        # Eq. 9 is exactly linear: N_idle(c*rho) = c * N_idle(rho)
+        assert math.isclose(n_idle_dense(c * rho, b),
+                            c * n_idle_dense(rho, b), rel_tol=1e-9)
+
+    @given(rho=st.floats(10.0, 500.0), c=st.floats(1.1, 4.0),
+           ell=st.integers(64, 65536))
+    @settings(max_examples=100, deadline=None)
+    def test_attn_monotone_in_rho(self, rho, c, ell):
+        # more FLOPs per byte -> later balance point (inf once memory-bound
+        # for all N: 2L <= rho*s)
+        assert n_idle_attn(c * rho, ell) >= n_idle_attn(rho, ell)
+
+    @given(rho=st.floats(10.0, 500.0), c=st.floats(1.1, 4.0),
+           k=st.sampled_from([2, 8, 32]))
+    @settings(max_examples=100, deadline=None)
+    def test_moe_monotone_in_rho(self, rho, c, k):
+        a = n_idle_moe(rho, 1, k, e_act=256, d_ff=512)
+        b = n_idle_moe(c * rho, 1, k, e_act=256, d_ff=512)
+        assert b >= a
+
+    @given(b=st.integers(1, 64))
+    @settings(max_examples=20, deadline=None)
+    def test_dense_boundary_via_synthetic_hardware(self, b):
+        # the same scaling observed through a HardwareSpec roofline
+        lo, hi = _hw(100.0), _hw(400.0)
+        assert n_idle_dense(hi.rho, b) > n_idle_dense(lo.rho, b)
+        assert math.isclose(hi.rho / lo.rho, 4.0, rel_tol=1e-6)
+
+
+# ===========================================================================
+# The principles: min of terms, attained by the first-exiting module
+# ===========================================================================
+
+def _assert_min_attained(p):
+    assert p.n_max == min(p.terms.values())
+    assert p.terms[p.limiting] == p.n_max
+    assert p.limiting in p.terms
+
+
+class TestPrinciplesAreMins:
+    @given(b=st.integers(1, 128))
+    @settings(max_examples=100, deadline=None)
+    def test_dense_eq12(self, b):
+        p = predict_dense(H20, G256, b=b)
+        _assert_min_attained(p)
+        # Eq. 12 terms literally: min(rho*s/2b, M_attn)
+        assert p.n_max == min(n_idle_dense(H20.rho, b), float(G256.m_attn))
+
+    @given(e=st.sampled_from([8, 64, 256]), k=st.sampled_from([1, 2, 8, 32]),
+           d_ff=st.sampled_from([128, 512, 2048]))
+    @settings(max_examples=100, deadline=None)
+    def test_moe_balanced_eq13(self, e, k, d_ff):
+        if k > e:
+            return
+        g = GranularitySpec.for_backend(n_experts=e)
+        p = predict_moe_balanced(H20, g, n_experts=e, k=k, d_ff=d_ff)
+        _assert_min_attained(p)
+        assert p.n_max == min(g.m_moe * e / k, float(g.tau), float(g.m_attn))
+
+    @given(k=st.sampled_from([1, 2, 8, 32]),
+           d_ff=st.sampled_from([128, 512, 2048]))
+    @settings(max_examples=50, deadline=None)
+    def test_moe_skewed_eq14(self, k, d_ff):
+        p = predict_moe_skewed(H20, G256, k=k, d_ff=d_ff)
+        _assert_min_attained(p)
+        assert p.n_max == min(float(G256.m_moe), float(G256.m_attn))
+        # skew never exceeds balanced (paper: skew is the lower bound)
+        bal = predict_moe_balanced(H20, G256, n_experts=256, k=k, d_ff=d_ff)
+        assert p.n_max <= bal.n_max
+
+    @given(b=st.integers(1, 32), ell=st.integers(64, 65536),
+           arch=st.sampled_from(["stablelm_3b", "mixtral_8x22b",
+                                 "falcon_mamba_7b", "zamba2_1p2b"]),
+           routing=st.sampled_from(["balanced", "skewed"]))
+    @settings(max_examples=60, deadline=None)
+    def test_model_composition_min(self, b, ell, arch, routing):
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        g = GranularitySpec.for_backend(cfg.ffn.n_experts or 0)
+        p = predict_model(cfg, TPU_V5E, g, b, ell, routing=routing)
+        _assert_min_attained(p)

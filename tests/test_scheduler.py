@@ -16,6 +16,10 @@ from repro.serving import (DecodeEngine, DiffusionBlockDecoder, MTPDecoder,
 KEY = jax.random.PRNGKey(0)
 TOKENS = 16
 
+# full serving loops (solo references + batched runs) — nightly lane;
+# the tier-1 lane keeps the kernel-path golden tests in test_ragged_decode
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def setup():

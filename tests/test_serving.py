@@ -12,6 +12,9 @@ from repro.serving import (DecodeEngine, DiffusionBlockDecoder,
 
 KEY = jax.random.PRNGKey(0)
 
+# multi-step generate loops over the reduced model — nightly lane
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def dense_setup():

@@ -10,6 +10,9 @@ import pytest
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore, save
 from repro.configs import get_config
+
+# end-to-end training loops — the nightly lane's job
+pytestmark = pytest.mark.slow
 from repro.data import DataConfig, make_pipeline
 from repro.dist.elastic import StepWatchdog, elastic_mesh, run_with_restarts
 from repro.models import init_model
