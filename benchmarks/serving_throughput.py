@@ -1,11 +1,14 @@
 """Serving throughput vs concurrency — the scheduler's NFP story.
 
 Measures tokens/s through the budget-aware ServingLoop at 1/2/4/8
-concurrent requests (greedy and speculative split modes) on the reduced
-CPU config.  The headline: positions per forward grow with concurrency
-but stay inside N_max(eps), so batched serving rides the near-free
-region — throughput scales with concurrency while per-forward latency
-stays near the baseline.
+concurrent requests on the reduced CPU config, across all four
+algorithm families (greedy / speculative / mtp / diffusion budget-split
+modes).  The headline: positions per forward grow with concurrency but
+stay inside N_max(eps), so batched serving rides the near-free region —
+throughput scales with concurrency while per-forward latency stays near
+the baseline.  Diffusion counts every refinement iteration as a forward
+(plus the clean-KV commit forward), so its tok/fwd reflects the real
+refine-forward budget spend.
 
 With --kernel (serve through the Pallas ragged decode-attention path)
 each row also carries that path's measured kernel-granularity slack
@@ -29,7 +32,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_model
-from repro.serving import DecodeEngine, ServingLoop
+from repro.serving import DecodeEngine, ServingLoop, init_mtp_heads
 
 from benchmarks.common import emit
 
@@ -39,12 +42,22 @@ TOKENS = 24
 MAX_LEN = 256
 
 
+def _mode_kwargs(cfg, mode: str):
+    if mode == "mtp":
+        return {"mtp_heads": init_mtp_heads(
+            jax.random.PRNGKey(5), cfg.d_model, cfg.vocab_size, n_heads=4)}
+    if mode == "diffusion":
+        return {"refine_steps": 2}
+    return {}
+
+
 def _run_once(cfg, params, n_requests: int, mode: str, max_width: int,
               use_kernel: bool):
     slots = min(n_requests, 8)
     eng = DecodeEngine(cfg, params, batch=slots, max_len=MAX_LEN,
                        use_kernel=use_kernel)
-    loop = ServingLoop(eng, mode=mode, max_width=max_width)
+    loop = ServingLoop(eng, mode=mode, max_width=max_width,
+                       **_mode_kwargs(cfg, mode))
     for i in range(n_requests):
         prompt = np.asarray(jax.random.randint(
             jax.random.PRNGKey(100 + i), (PROMPT_LEN,), 0, cfg.vocab_size))
@@ -63,7 +76,8 @@ def _serve(cfg, params, n_requests: int, mode: str, max_width: int = 8,
     return _run_once(cfg, params, n_requests, mode, max_width, use_kernel)
 
 
-def run(modes=("greedy", "speculative"), use_kernel: bool = False) -> None:
+def run(modes=("greedy", "speculative", "mtp", "diffusion"),
+        use_kernel: bool = False) -> None:
     cfg = get_config(ARCH, reduced=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
     for mode in modes:
@@ -86,7 +100,7 @@ def run(modes=("greedy", "speculative"), use_kernel: bool = False) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--modes", default="greedy,speculative")
+    ap.add_argument("--modes", default="greedy,speculative,mtp,diffusion")
     ap.add_argument("--kernel", action="store_true",
                     help="serve through the Pallas ragged decode kernel "
                          "(interpret mode on CPU)")

@@ -24,8 +24,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _moe_kernel(block_expert_ref, block_valid_ref,
-                x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref, *,
+                x_ref, *refs,
                 activation: str, n_f_tiles: int):
+    # refs is (wg, wu, wd, o, acc) for swiglu and (wu, wd, o, acc) for
+    # gelu — a gated activation is the ONLY reason to stream a gate
+    # tile; the gelu grid must not pay a second up-projection's DMA.
+    if activation == "swiglu":
+        wg_ref, wu_ref, wd_ref, o_ref, acc_ref = refs
+    else:
+        wu_ref, wd_ref, o_ref, acc_ref = refs
     jf = pl.program_id(1)
 
     @pl.when(jf == 0)
@@ -61,7 +68,10 @@ def moe_ffn_pallas(x_padded, w_gate, w_up, w_down, block_expert, block_valid,
                    *, token_block: int, f_tile: int, activation: str,
                    interpret: bool = False):
     """x_padded: (m_pad, d); w_*: (E, d, f) / (E, f, d);
-    block_expert/block_valid: (n_blocks,) i32 scalar-prefetch."""
+    block_expert/block_valid: (n_blocks,) i32 scalar-prefetch.
+    ``w_gate`` may be None for non-gated activations — the gate operand
+    is then dropped from the spec list entirely, so the grid streams one
+    up-projection tile per step instead of two."""
     m_pad, d = x_padded.shape
     e, _, f = w_up.shape
     n_blocks = m_pad // token_block
@@ -70,31 +80,29 @@ def moe_ffn_pallas(x_padded, w_gate, w_up, w_down, block_expert, block_valid,
 
     kernel = functools.partial(_moe_kernel, activation=activation,
                                n_f_tiles=n_f_tiles)
+    expert_spec = pl.BlockSpec(
+        (1, d, f_tile), lambda i, j, be, bv: (be[i], 0, j))
+    in_specs = [pl.BlockSpec((token_block, d), lambda i, j, be, bv: (i, 0))]
+    operands = [x_padded]
     if activation == "swiglu":
-        gate_spec = pl.BlockSpec(
-            (1, d, f_tile), lambda i, j, be, bv: (be[i], 0, j))
-        gate_arg = w_gate
-    else:
-        # feed w_up as a placeholder; kernel ignores it for gelu
-        gate_spec = pl.BlockSpec(
-            (1, d, f_tile), lambda i, j, be, bv: (be[i], 0, j))
-        gate_arg = w_up
+        in_specs.append(expert_spec)
+        operands.append(w_gate)
+    in_specs += [
+        expert_spec,
+        pl.BlockSpec((1, f_tile, d), lambda i, j, be, bv: (be[i], j, 0)),
+    ]
+    operands += [w_up, w_down]
 
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((token_block, d), lambda i, j, be, bv: (i, 0)),
-                gate_spec,
-                pl.BlockSpec((1, d, f_tile), lambda i, j, be, bv: (be[i], 0, j)),
-                pl.BlockSpec((1, f_tile, d), lambda i, j, be, bv: (be[i], j, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((token_block, d),
                                    lambda i, j, be, bv: (i, 0)),
             scratch_shapes=[pltpu.VMEM((token_block, d), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((m_pad, d), x_padded.dtype),
         interpret=interpret,
-    )(block_expert, block_valid, x_padded, gate_arg, w_up, w_down)
+    )(block_expert, block_valid, *operands)

@@ -77,7 +77,9 @@ def grouped_ffn(x_sorted, params: Dict, group_sizes, activation: str = "swiglu",
         expert_of_sorted, group_sizes, e, token_block)
 
     x_padded = jnp.zeros((m_pad_max, d), x_sorted.dtype).at[slot].set(x_sorted)
-    w_gate = params.get("w_gate", params["w_up"])
+    # non-gated activations carry no gate weights — the kernel drops the
+    # operand entirely rather than streaming a placeholder
+    w_gate = params["w_gate"] if activation == "swiglu" else None
     out_padded = moe_ffn_pallas(
         x_padded, w_gate, params["w_up"], params["w_down"],
         block_expert, block_valid, token_block=token_block, f_tile=f_tile,

@@ -63,7 +63,11 @@ def _multi_request(args, cfg, params) -> None:
     eng = DecodeEngine(cfg, params, batch=args.slots, max_len=args.max_len,
                        hardware=get_hardware(args.hardware),
                        use_kernel=args.use_kernel)
-    loop = ServingLoop(eng, mode=args.serve_mode)
+    kwargs = {}
+    if args.serve_mode == "mtp":
+        kwargs["mtp_heads"] = init_mtp_heads(
+            jax.random.PRNGKey(5), cfg.d_model, cfg.vocab_size, n_heads=4)
+    loop = ServingLoop(eng, mode=args.serve_mode, **kwargs)
     for i in range(args.requests):
         prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
                                     (args.prompt_len,), 0, cfg.vocab_size)
@@ -107,7 +111,7 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4,
                     help="cache slots (max concurrent requests)")
     ap.add_argument("--serve-mode", default="greedy",
-                    choices=["greedy", "speculative"],
+                    choices=["greedy", "speculative", "diffusion", "mtp"],
                     help="scheduler mode for --requests")
     args = ap.parse_args()
 

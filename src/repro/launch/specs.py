@@ -138,8 +138,8 @@ def prefill_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             fwd_in = {"tokens": inp["tokens"]}
         if "frames" in inp:
             fwd_in["frames"] = inp["frames"]
-        logits, new_cache, _ = forward(params, cfg, fwd_in, mode="prefill",
-                                       cache=cache, cache_len=0)
+        logits, new_cache, _, _ = forward(params, cfg, fwd_in, mode="prefill",
+                                          cache=cache, cache_len=0)
         return logits[:, -1], new_cache
 
     params = params_abstract(cfg)
@@ -191,9 +191,9 @@ def decode_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
             fwd_in = {"tokens": inp["tokens"]}
         if "frames" in inp:
             fwd_in["frames"] = inp["frames"]
-        logits, new_cache, _ = forward(params, cfg, fwd_in, mode="decode",
-                                       cache=cache, cache_len=cache_len,
-                                       swa_ring=swa_ring)
+        logits, new_cache, _, _ = forward(params, cfg, fwd_in, mode="decode",
+                                          cache=cache, cache_len=cache_len,
+                                          swa_ring=swa_ring)
         return logits, new_cache
 
     params = params_abstract(cfg)

@@ -265,8 +265,13 @@ def forward(params, cfg: ArchConfig, inputs: Dict, *, mode: str = "train",
             cache: Optional[Dict] = None, cache_len=0,
             use_kernel: bool = False, routing_override=None,
             remat=False, swa_ring: bool = False,
-            ) -> Tuple[Array, Optional[Dict], Array]:
-    """Returns (logits, new_cache, moe_aux_loss).
+            ) -> Tuple[Array, Optional[Dict], Array, Array]:
+    """Returns (logits, new_cache, moe_aux_loss, hidden).
+
+    ``hidden`` is the final-norm output (b, s, d) — the representation
+    the LM head (and any auxiliary head bank, e.g. MTP) reads.  Serving
+    threads it out so multi-token-prediction proposals consume the real
+    last hidden state rather than an embedding-row proxy.
 
     inputs: {"tokens": (b,s) i32} or {"embeds": (b,s,d)}; whisper adds
     {"frames": (b,F,d)} (stub frontend output).
@@ -361,4 +366,4 @@ def forward(params, cfg: ArchConfig, inputs: Dict, *, mode: str = "train",
     else:
         logits = lm_head(params["lm_head"], x)
     new_cache = None if cache is None else {"segments": new_segments}
-    return logits, new_cache, aux_total
+    return logits, new_cache, aux_total, x

@@ -1,13 +1,18 @@
 """repro.serving — multi-position decode engine, the common parallel-
-decoding protocol, algorithm drivers, and the multi-request scheduler."""
-from repro.serving.algorithm import DecodeStats, ParallelDecodeAlgorithm
-from repro.serving.diffusion import DiffusionBlockDecoder
+decoding protocol (solo drivers + scheduler-side slot adapters), and the
+multi-request scheduler."""
+from repro.serving.algorithm import (DecodeStats, ParallelDecodeAlgorithm,
+                                     SlotAdapter)
+from repro.serving.diffusion import DiffusionBlockDecoder, DiffusionSlotAdapter
 from repro.serving.engine import DecodeEngine
-from repro.serving.mtp import MTPDecoder, init_mtp_heads, mtp_loss
+from repro.serving.mtp import (MTPDecoder, MTPSlotAdapter, init_mtp_heads,
+                               mtp_loss)
 from repro.serving.scheduler import Request, ServingLoop
-from repro.serving.speculative import SpeculativeDecoder, ngram_draft
+from repro.serving.speculative import (SpeculativeDecoder,
+                                       SpeculativeSlotAdapter, ngram_draft)
 
 __all__ = ["DecodeEngine", "DecodeStats", "ParallelDecodeAlgorithm",
-           "SpeculativeDecoder", "DiffusionBlockDecoder", "MTPDecoder",
-           "Request", "ServingLoop", "init_mtp_heads", "mtp_loss",
-           "ngram_draft"]
+           "SlotAdapter", "SpeculativeDecoder", "SpeculativeSlotAdapter",
+           "DiffusionBlockDecoder", "DiffusionSlotAdapter", "MTPDecoder",
+           "MTPSlotAdapter", "Request", "ServingLoop", "init_mtp_heads",
+           "mtp_loss", "ngram_draft"]

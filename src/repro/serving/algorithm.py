@@ -5,14 +5,23 @@ verification, diffusion block refinement — is the same system-level
 loop: PROPOSE a block of candidate positions, VERIFY it with one (or a
 few) multi-position decode forwards (Eq. 2), COMMIT the accepted prefix
 to the KV cache.  The NFP budget caps the block width in every case
-(paper Sec. 6), so the driver machinery — prefill, width selection,
-forward/stats accounting, context bookkeeping, commit arithmetic — is
-algorithm-independent and lives here once.
+(paper Sec. 6), so the driver machinery is algorithm-independent and
+lives here once, at BOTH serving granularities:
 
-A new algorithm implements ``propose`` (and optionally ``resolve`` when
-verification is not single-forward greedy acceptance) and inherits the
-rest; see ``speculative.py`` / ``mtp.py`` / ``diffusion.py`` for the
-three ~50-line instantiations.
+  ``ParallelDecodeAlgorithm``  the batch=1 driver: one request owns the
+                               whole engine (and the whole budget).
+  ``SlotAdapter``              the scheduler-side adapter: the same
+                               propose → verify → commit protocol driven
+                               ROW-WISE by ``ServingLoop`` — every active
+                               request fills its slot's row of ONE shared
+                               multi-position forward per step, and the
+                               NFP budget is split across the rows.
+
+A new algorithm implements ``propose`` (and optionally ``resolve`` /
+``run_step`` when verification is not single-forward greedy acceptance,
+e.g. diffusion refinement) and inherits the rest; see
+``speculative.py`` / ``mtp.py`` / ``diffusion.py`` for the paired
+instantiations.
 """
 from __future__ import annotations
 
@@ -24,7 +33,7 @@ import numpy as np
 
 from repro.serving.engine import DecodeEngine
 
-__all__ = ["DecodeStats", "ParallelDecodeAlgorithm"]
+__all__ = ["DecodeStats", "ParallelDecodeAlgorithm", "SlotAdapter"]
 
 
 @dataclass
@@ -71,6 +80,11 @@ class ParallelDecodeAlgorithm:
                               output stream identical to AR greedy.
       begin(prompt, pending)  optional hook after target prefill
                               (draft-model setup and the like).
+      observe(hidden, k)      optional hook: the verify forward's
+                              final-norm hidden states (1, n, d) plus
+                              the accepted index k whose logits produced
+                              the next pending token (MTP proposes from
+                              hidden[0, k]).
     """
 
     engine: DecodeEngine
@@ -87,6 +101,9 @@ class ParallelDecodeAlgorithm:
     def begin(self, prompt: np.ndarray, pending: int) -> None:
         pass
 
+    def observe(self, hidden, k: int) -> None:
+        pass
+
     def propose(self, context: np.ndarray, pending: int,
                 n: int) -> np.ndarray:
         raise NotImplementedError
@@ -96,12 +113,13 @@ class ParallelDecodeAlgorithm:
         """Greedy verification: accept the longest draft prefix the
         target model reproduces, plus the model's own next token."""
         block = np.concatenate([[pending], drafts]).astype(np.int64)
-        logits, new_cache = self.forward_block(block)
+        logits, new_cache, hidden = self.forward_block(block)
         preds = np.asarray(jnp.argmax(logits[0], axis=-1))
         k = 0
         while k < len(drafts) and preds[k] == drafts[k]:
             k += 1
         self.engine.commit(new_cache, 1 + k)
+        self.observe(hidden, k)
         return list(drafts[:k]), int(preds[k])
 
     # ------------------------------------------------------------------
@@ -109,14 +127,15 @@ class ParallelDecodeAlgorithm:
     # ------------------------------------------------------------------
     def forward_block(self, block: np.ndarray):
         """One multi-position decode forward over ``block`` WITHOUT
-        committing; tracks forward/position stats."""
+        committing; tracks forward/position stats.  Returns
+        (logits, new_cache, hidden)."""
         eng = self.engine
         toks = jnp.broadcast_to(jnp.asarray(block[None], jnp.int32),
                                 (eng.batch, len(block)))
-        logits, new_cache = eng.peek_step(toks)
+        logits, new_cache, hidden = eng.peek_step(toks)
         self.stats.forwards += 1
         self.stats.positions += len(block)
-        return logits, new_cache
+        return logits, new_cache, hidden
 
     def generate(self, prompt, max_tokens: int
                  ) -> Tuple[np.ndarray, Dict]:
@@ -138,3 +157,103 @@ class ParallelDecodeAlgorithm:
             pending = next_pending
         self.stats.tokens = len(generated)
         return np.asarray(generated[:max_tokens]), self.stats.as_dict()
+
+
+class SlotAdapter:
+    """Scheduler-side propose → verify → commit adapter.
+
+    ``ServingLoop`` owns admission, slots, telemetry, and retirement;
+    the adapter owns what happens INSIDE one scheduler step.  The base
+    class is the greedy/speculative shape — every active request's
+    pending token (plus optional per-row drafts from ``propose``) rides
+    ONE shared multi-position forward, and each row greedily accepts its
+    longest reproduced draft prefix, which keeps every stream
+    byte-identical to solo greedy decoding.
+
+    Subclass protocol:
+      width(n_active, budget)  per-request block width for this step —
+                               how the adapter splits the NFP budget
+                               across rows (ASPD-style).
+      headroom()               cache positions a slot needs beyond
+                               prompt + max_tokens (admission check).
+      begin(req, hidden)       after the request's slot is prefilled;
+                               ``hidden`` is the (d,) final-norm state
+                               of its last prompt position.
+      propose(req, n)          length-<=n draft block for one row.
+      observe(req, k, hidden)  after acceptance: k = accepted index,
+                               ``hidden`` the row's (n, d) verify-forward
+                               hidden states.
+      run_step(slots, width, budget)
+                               the whole verify/commit drive; override
+                               when verification needs several shared
+                               forwards (diffusion refinement).
+    """
+
+    mode = "greedy"
+
+    def __init__(self, loop):
+        self.loop = loop
+
+    # -- protocol ------------------------------------------------------
+    def width(self, n_active: int, budget: int) -> int:
+        return 1
+
+    def headroom(self) -> int:
+        return 0
+
+    def begin(self, req, hidden) -> None:
+        pass
+
+    def propose(self, req, n: int) -> np.ndarray:
+        return np.zeros((0,), np.int64)
+
+    def propose_rows(self, want: Dict[int, int]) -> Dict[int, np.ndarray]:
+        """Draft blocks for many rows at once: {slot: n} -> {slot:
+        drafts}.  Default defers to per-row ``propose``; adapters whose
+        proposal is itself a device computation (the MTP head bank)
+        override this to run ONE batched dispatch for all rows instead
+        of one dispatch + host sync per row per step."""
+        return {s: self.propose(self.loop.active[s], n)
+                for s, n in want.items()}
+
+    def observe(self, req, k: int, hidden) -> None:
+        pass
+
+    # -- default drive: propose / ONE shared forward / greedy accept ---
+    def run_step(self, slots: List[int], width: int, budget: int) -> None:
+        loop = self.loop
+        eng = loop.engine
+        tokens = np.zeros((eng.batch, width), np.int64)
+        want: Dict[int, int] = {}
+        for s in slots:
+            req = loop.active[s]
+            tokens[s, 0] = req.pending
+            # clip each row's drafts to its remaining tokens — budget
+            # positions past a request's max_tokens would be discarded
+            n_draft = min(width - 1,
+                          req.max_tokens - len(req.generated) - 1)
+            if n_draft > 0:
+                want[s] = n_draft
+        drafts: Dict[int, np.ndarray] = {}
+        for s, d in (self.propose_rows(want) if want else {}).items():
+            d = np.asarray(d, np.int64)[:want[s]]
+            if len(d):
+                drafts[s] = d
+                tokens[s, 1:1 + len(d)] = d
+        logits, new_cache, hidden = loop.shared_forward(tokens, budget)
+        preds = np.asarray(jnp.argmax(logits, axis=-1))   # (batch, width)
+        advances = np.zeros((eng.batch,), np.int32)
+        for s in slots:
+            req = loop.active[s]
+            k = 0
+            d = drafts.get(s)
+            if d is not None:
+                while k < len(d) and preds[s, k] == d[k]:
+                    k += 1
+                req.generated.extend(int(t) for t in d[:k])
+            bonus = int(preds[s, k])
+            req.generated.append(bonus)
+            advances[s] = 1 + k                  # pending + accepted drafts
+            req.pending = bonus
+            self.observe(req, k, hidden[s])
+        eng.commit_slots(new_cache, advances)

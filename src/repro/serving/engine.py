@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,19 +30,20 @@ Array = jax.Array
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def _prefill_fn(params, cfg: ArchConfig, tokens, cache, use_kernel=False):
-    logits, cache, _ = forward(params, cfg, {"tokens": tokens},
-                               mode="prefill", cache=cache, cache_len=0,
-                               use_kernel=use_kernel)
-    return logits, cache
+    logits, cache, _, hidden = forward(params, cfg, {"tokens": tokens},
+                                       mode="prefill", cache=cache,
+                                       cache_len=0, use_kernel=use_kernel)
+    return logits, cache, hidden
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
 def _decode_fn(params, cfg: ArchConfig, tokens, cache, cache_len,
                use_kernel=False):
-    logits, cache, _ = forward(params, cfg, {"tokens": tokens},
-                               mode="decode", cache=cache,
-                               cache_len=cache_len, use_kernel=use_kernel)
-    return logits, cache
+    logits, cache, _, hidden = forward(params, cfg, {"tokens": tokens},
+                                       mode="decode", cache=cache,
+                                       cache_len=cache_len,
+                                       use_kernel=use_kernel)
+    return logits, cache, hidden
 
 
 @dataclass
@@ -66,6 +67,10 @@ class DecodeEngine:
         # per-slot cache lengths for the scheduler's slotted mode; the
         # single-request drivers keep using the scalar ``cache_len``
         self.slot_lens = jnp.zeros((self.batch,), jnp.int32)
+        # (b, d) final-norm hidden of the last prefilled position (MTP
+        # proposals read it); one entry per bucketed prefill forward
+        self.last_hidden: Optional[Array] = None
+        self.prefill_log: List[Dict] = []
 
     # ------------------------------------------------------------------
     def nfp_budget(self, eps: float = 0.2, routing: str = "balanced",
@@ -79,10 +84,16 @@ class DecodeEngine:
 
     # ------------------------------------------------------------------
     def prefill(self, tokens: Array) -> Array:
-        """tokens: (b, prompt_len).  Returns last-position logits."""
-        logits, self.cache = _prefill_fn(self.params, self.cfg, tokens,
-                                         self.cache, self.use_kernel)
+        """tokens: (b, prompt_len).  Returns last-position logits.
+
+        ``self.last_hidden`` holds the (b, d) final-norm hidden state of
+        the last prompt position — the state auxiliary head banks (MTP)
+        propose from."""
+        logits, self.cache, hidden = _prefill_fn(self.params, self.cfg,
+                                                 tokens, self.cache,
+                                                 self.use_kernel)
         self.cache_len = jnp.asarray(tokens.shape[1], jnp.int32)
+        self.last_hidden = hidden[:, -1]
         return logits[:, -1]
 
     def decode_step(self, tokens: Array, advance: Optional[int] = None
@@ -91,9 +102,9 @@ class DecodeEngine:
         positions.  ``advance`` = how many of the N positions to commit to
         the cache (speculative decoding commits only accepted tokens);
         default commits all N."""
-        logits, new_cache = _decode_fn(self.params, self.cfg, tokens,
-                                       self.cache, self.cache_len,
-                                       self.use_kernel)
+        logits, new_cache, _ = _decode_fn(self.params, self.cfg, tokens,
+                                          self.cache, self.cache_len,
+                                          self.use_kernel)
         n = tokens.shape[1]
         adv = n if advance is None else advance
         if adv > 0:
@@ -101,8 +112,9 @@ class DecodeEngine:
             self.cache_len = self.cache_len + adv
         return logits
 
-    def peek_step(self, tokens: Array) -> Tuple[Array, Dict]:
-        """Decode forward WITHOUT committing (verification forwards)."""
+    def peek_step(self, tokens: Array) -> Tuple[Array, Dict, Array]:
+        """Decode forward WITHOUT committing (verification forwards).
+        Returns (logits, new_cache, hidden)."""
         return _decode_fn(self.params, self.cfg, tokens, self.cache,
                           self.cache_len, self.use_kernel)
 
@@ -120,23 +132,76 @@ class DecodeEngine:
         m = jnp.zeros((self.batch,), bool).at[jnp.asarray(rows)].set(True)
         return m.reshape((1, self.batch) + (1,) * (like.ndim - 2))
 
-    def prefill_slot(self, slot: int, prompt: Array) -> Array:
-        """Prefill ONE cache slot with a (p,) prompt; other slots keep
-        their state.  Returns the slot's last-position logits."""
-        toks = jnp.broadcast_to(jnp.asarray(prompt, jnp.int32)[None],
-                                (self.batch, len(prompt)))
-        logits, new_cache = _prefill_fn(self.params, self.cfg, toks,
-                                        self.cache, self.use_kernel)
-        self.cache = jax.tree.map(
-            lambda old, new: jnp.where(self._row_mask([slot], old),
-                                       new, old),
-            self.cache, new_cache)
-        self.slot_lens = self.slot_lens.at[slot].set(len(prompt))
-        return logits[slot, -1]
+    def prefill_bucket(self, p: int) -> int:
+        """Power-of-two prompt-length bucket (floor 8, ceiling max_len):
+        bucketed prefill compiles once per BUCKET, not once per distinct
+        prompt length."""
+        b = 8
+        while b < p:
+            b *= 2
+        return min(b, self.max_len)
 
-    def decode_slots(self, tokens: Array) -> Tuple[Array, Dict]:
+    def _needs_exact_prefill(self) -> bool:
+        """SSM / hybrid segments carry a recurrent state that would
+        absorb the bucket's tail padding — those archs prefill at exact
+        prompt lengths (still batched across equal-length prompts)."""
+        from repro.core.arch import LAYER_ATTN
+        from repro.models.transformer import make_segments
+        return any(kind != LAYER_ATTN for kind, _ in make_segments(self.cfg))
+
+    def prefill_slots(self, prompts: Dict[int, Array]
+                      ) -> Dict[int, Tuple[Array, Array]]:
+        """Bucketed multi-slot batched prefill: fill MANY cache slots in
+        one forward.  ``prompts``: {slot: (p,) tokens}.
+
+        Prompts are right-padded to a shared power-of-two length bucket
+        (masked by causality: pad positions sit AFTER each prompt, so no
+        prompt position attends to them; their junk KV lands beyond
+        ``slot_lens`` where the decode mask never reads it before the
+        next forward overwrites it).  One compile per bucket replaces the
+        per-admission recompile storm of prefilling each distinct prompt
+        length separately — and one forward admits the whole group.
+
+        Returns {slot: (last-prompt-position logits, hidden)}.
+        """
+        lens = {s: int(jnp.shape(p)[0]) for s, p in prompts.items()}
+        groups: List[Tuple[int, List[int]]]
+        if self._needs_exact_prefill():
+            by_len: Dict[int, List[int]] = {}
+            for s, p in lens.items():
+                by_len.setdefault(p, []).append(s)
+            groups = [(p, rows) for p, rows in sorted(by_len.items())]
+        else:
+            groups = [(self.prefill_bucket(max(lens.values())),
+                       list(prompts))]
+        out: Dict[int, Tuple[Array, Array]] = {}
+        for width, rows in groups:
+            toks = np.zeros((self.batch, width), np.int32)
+            for s in rows:
+                toks[s, :lens[s]] = np.asarray(prompts[s], np.int64)
+            logits, new_cache, hidden = _prefill_fn(
+                self.params, self.cfg, jnp.asarray(toks), self.cache,
+                self.use_kernel)
+            self.cache = jax.tree.map(
+                lambda old, new: jnp.where(self._row_mask(rows, old),
+                                           new, old),
+                self.cache, new_cache)
+            for s in rows:
+                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                out[s] = (logits[s, lens[s] - 1], hidden[s, lens[s] - 1])
+            self.prefill_log.append({"slots": sorted(rows),
+                                     "bucket": width})
+        return out
+
+    def prefill_slot(self, slot: int, prompt: Array) -> Array:
+        """Prefill ONE cache slot; thin wrapper over ``prefill_slots``."""
+        (logits, _hidden) = self.prefill_slots({slot: prompt})[slot]
+        return logits
+
+    def decode_slots(self, tokens: Array) -> Tuple[Array, Dict, Array]:
         """Multi-position decode forward over ALL slots at their own
         cache lengths, WITHOUT committing.  tokens: (batch, n).
+        Returns (logits, new_cache, hidden).
 
         With ``use_kernel=True`` the per-slot lengths ride the ragged
         Pallas decode-attention kernel's scalar-prefetch lane — one
@@ -147,14 +212,15 @@ class DecodeEngine:
     def commit_slots(self, new_cache: Dict, advances) -> None:
         """Commit per-slot: rows with advance > 0 take the new cache and
         bump their length; rows with 0 are untouched (inactive slots or
-        fully-rejected blocks)."""
+        fully-rejected blocks).  The row mask is built from the advances
+        ON DEVICE — materializing it on the host would force a device
+        sync every scheduler step."""
         adv = jnp.asarray(advances, jnp.int32)
-        mask_rows = [int(i) for i in np.nonzero(np.asarray(advances))[0]]
-        if not mask_rows:
-            return
+        keep = adv > 0                               # (batch,) on device
         self.cache = jax.tree.map(
-            lambda old, new: jnp.where(self._row_mask(mask_rows, old),
-                                       new, old),
+            lambda old, new: jnp.where(
+                keep.reshape((1, self.batch) + (1,) * (old.ndim - 2)),
+                new, old),
             self.cache, new_cache)
         self.slot_lens = self.slot_lens + adv
 

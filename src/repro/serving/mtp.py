@@ -10,6 +10,12 @@ commit driver), but the draft is a model component rather than a
 separate model, so the NFP budget directly caps the useful number of
 MTP heads (paper Sec. 6: "MTP prediction length").
 
+The proposal input is the REAL final-norm hidden state threaded out of
+``models.transformer.forward``: the prefill hands over the last prompt
+position's state, and every verify forward hands over the state at the
+accepted index whose logits produced the new pending token — exactly
+the state the heads were trained against (``mtp_loss``).
+
 Greedy acceptance keeps output identical to AR greedy decoding.
 """
 from __future__ import annotations
@@ -22,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import _init
-from repro.serving.algorithm import ParallelDecodeAlgorithm
+from repro.serving.algorithm import ParallelDecodeAlgorithm, SlotAdapter
 from repro.serving.engine import DecodeEngine
 
 Array = jax.Array
@@ -64,8 +70,9 @@ def mtp_loss(heads: Dict, hidden: Array, tokens: Array) -> Array:
 
 @dataclass
 class MTPDecoder(ParallelDecodeAlgorithm):
-    """MTP generation: propose with the head bank, verify with one
-    multi-position forward, accept greedily (lossless vs AR greedy)."""
+    """MTP generation: propose with the head bank from the real last
+    hidden state, verify with one multi-position forward, accept
+    greedily (lossless vs AR greedy)."""
 
     engine: DecodeEngine
     heads: Dict
@@ -79,10 +86,59 @@ class MTPDecoder(ParallelDecodeAlgorithm):
 
     parallel_width = _n
 
+    def begin(self, prompt: np.ndarray, pending: int) -> None:
+        # the engine's prefill just produced ``pending`` from the last
+        # prompt position's hidden state — propose offsets +2.. from it
+        self._hidden = self.engine.last_hidden[0]
+
+    def observe(self, hidden, k: int) -> None:
+        # logits row k of the verify forward produced the new pending
+        # token, so hidden row k is the state to propose from next
+        self._hidden = hidden[0, k]
+
     def propose(self, context: np.ndarray, pending: int,
                 n: int) -> np.ndarray:
-        # hidden state proxy: embed of pending token (heads are trained on
-        # hidden states; for the driver demo the embedding row suffices)
-        hid = self.engine.params["embed"]["table"][jnp.asarray([pending])]
-        return np.asarray(mtp_propose(self.heads, hid))[0][:n].astype(
-            np.int64)
+        return np.asarray(mtp_propose(self.heads, self._hidden[None])
+                          )[0][:n].astype(np.int64)
+
+
+class MTPSlotAdapter(SlotAdapter):
+    """Scheduler-side MTP: each request proposes from ITS row's last
+    verify-forward hidden state (tracked on the Request across steps),
+    the head bank caps the useful width, and the remaining NFP budget is
+    split evenly across rows.  Greedy acceptance per row keeps every
+    stream lossless."""
+
+    mode = "mtp"
+
+    def __init__(self, loop, heads: Dict):
+        super().__init__(loop)
+        if heads is None:
+            raise ValueError("mtp serving mode needs an mtp_heads bank")
+        self.heads = heads
+
+    def width(self, n_active: int, budget: int) -> int:
+        bank = self.heads["heads"].shape[0]
+        w = max(1, budget // max(n_active, 1))
+        return min(w, self.loop.max_width, bank + 1)
+
+    def headroom(self) -> int:
+        return self.loop.max_width
+
+    def begin(self, req, hidden) -> None:
+        req.hidden = hidden
+
+    def propose(self, req, n: int) -> np.ndarray:
+        return np.asarray(mtp_propose(self.heads, req.hidden[None])
+                          )[0][:n].astype(np.int64)
+
+    def propose_rows(self, want):
+        # ONE head-bank dispatch over every row's hidden state — the
+        # per-row default would pay n_active device round-trips per step
+        rows = sorted(want)
+        hid = jnp.stack([self.loop.active[s].hidden for s in rows])
+        props = np.asarray(mtp_propose(self.heads, hid)).astype(np.int64)
+        return {s: props[i][:want[s]] for i, s in enumerate(rows)}
+
+    def observe(self, req, k: int, hidden) -> None:
+        req.hidden = hidden[k]

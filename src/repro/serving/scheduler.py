@@ -10,32 +10,55 @@ size; the scheduler spends it across MANY concurrent requests — the
     pre-allocated cache, at its own sequence length (per-slot
     ``cache_len`` threading through the decode forward),
   - admission keeps the active set small enough that every request gets
-    at least one position inside the budget; the rest queue,
-  - every scheduler step runs ONE batched multi-position forward whose
+    at least one position inside the budget; the rest queue.  Newly
+    admitted requests are prefilled TOGETHER: prompts are padded to a
+    power-of-two length bucket and all new slots fill in one forward
+    (one XLA compile per bucket instead of one per distinct prompt
+    length — see ``DecodeEngine.prefill_slots``),
+  - every scheduler step the ALGORITHM ADAPTER drives one (or, for
+    diffusion refinement, a few) batched multi-position forwards whose
     total positions (active slots x per-request width) never exceed
-    N_max(eps): in ``greedy`` mode width is 1 and the budget caps
-    concurrency; in ``speculative`` mode the remaining budget is split
-    evenly into per-request n-gram verification windows (ASPD-style
-    adaptive splitting), so a lone request gets the whole budget and a
-    full house degrades gracefully to width 1.
+    N_max(eps).
 
-Greedy acceptance everywhere: every request's token stream is identical
-to running it alone through ``DecodeEngine.greedy_generate``.
+All four parallel-decoding families run through the same ``SlotAdapter``
+propose → verify → commit protocol (``serving.algorithm``):
+
+  greedy       1 position per request per forward (lossless, minimal
+               latency variance),
+  speculative  per-request n-gram verification windows sized so the
+               whole forward stays inside the budget (ASPD-style
+               adaptive splitting; lossless),
+  mtp          per-request head-bank proposals from each row's real
+               last hidden state, one shared verify forward (lossless),
+  diffusion    per-request mask-block refinement where every refinement
+               iteration is one shared forward and a final shared
+               forward commits clean KV (matches the solo driver's
+               token stream per request).
+
+Greedy/speculative/mtp streams are identical to running each request
+alone through ``DecodeEngine.greedy_generate``; diffusion streams are
+identical to the solo ``DiffusionBlockDecoder`` at the same block size.
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.decode_attention.ops import slack_report
+from repro.serving.algorithm import SlotAdapter
+from repro.serving.diffusion import DiffusionSlotAdapter
 from repro.serving.engine import DecodeEngine
-from repro.serving.speculative import ngram_draft
+from repro.serving.mtp import MTPSlotAdapter
+from repro.serving.speculative import SpeculativeSlotAdapter
 
 __all__ = ["Request", "ServingLoop"]
+
+Array = jax.Array
 
 
 @dataclass
@@ -48,6 +71,7 @@ class Request:
     generated: List[int] = field(default_factory=list)
     pending: Optional[int] = None          # next token to feed (emitted,
     slot: Optional[int] = None             #   not yet in the cache)
+    hidden: Optional[Array] = None         # (d,) state MTP proposes from
     done: bool = False
 
     @property
@@ -64,41 +88,60 @@ class Request:
 class ServingLoop:
     """Multiplex concurrent requests through one shared DecodeEngine.
 
-    The engine's batch dimension is the slot pool.  ``mode``:
-      greedy       1 position per request per forward (lossless,
-                   minimal latency variance),
-      speculative  per-request n-gram drafts sized so the whole forward
-                   stays inside the NFP budget (lossless, higher
-                   throughput when the context has structure).
+    ``mode`` selects the per-slot algorithm adapter (see module
+    docstring); a custom ``SlotAdapter`` subclass instance can be
+    plugged in directly via ``adapter=`` (it receives this loop).
+    ``mtp_heads`` feeds the mtp adapter; ``block_size`` /
+    ``refine_steps`` / ``mask_id`` feed the diffusion adapter.
     """
 
+    MODES = ("greedy", "speculative", "diffusion", "mtp")
+
     def __init__(self, engine: DecodeEngine, mode: str = "greedy",
-                 eps: float = 0.2, max_width: int = 16):
-        if mode not in ("greedy", "speculative"):
-            raise ValueError(f"unknown serving mode {mode!r}")
+                 eps: float = 0.2, max_width: int = 16,
+                 adapter: Optional[SlotAdapter] = None,
+                 mtp_heads: Optional[Dict] = None,
+                 block_size: Optional[int] = None, refine_steps: int = 4,
+                 mask_id: Optional[int] = None):
         self.engine = engine
-        self.mode = mode
         self.eps = eps
         self.max_width = max_width
+        if adapter is None:
+            if mode not in self.MODES:
+                raise ValueError(f"unknown serving mode {mode!r}")
+            if mode == "greedy":
+                adapter = SlotAdapter(self)
+            elif mode == "speculative":
+                adapter = SpeculativeSlotAdapter(self)
+            elif mode == "mtp":
+                adapter = MTPSlotAdapter(self, mtp_heads)
+            else:
+                adapter = DiffusionSlotAdapter(
+                    self, block_size=block_size, refine_steps=refine_steps,
+                    mask_id=mask_id)
+        self.adapter = adapter
+        self.mode = adapter.mode
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}            # slot -> request
         self.free_slots: List[int] = list(range(engine.batch))
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
-        # per-step telemetry: active/width/positions/budget plus, when
+        # engine.prefill_log outlives this loop — remember where ours starts
+        self._prefill_log_start = len(engine.prefill_log)
+        # per-forward telemetry: active/width/positions/budget plus, when
         # serving through the kernel path, its measured granularity slack
         # (attn_row_util, kv_tiles_executed/grid/skipped, kv_tile_util) —
-        # the measured counterpart of the core.nfp M_attn prediction
+        # the measured counterpart of the core.nfp M_attn prediction.
+        # Diffusion logs one entry per refinement/commit forward, so
+        # ``len(step_log)`` counts FORWARDS in every mode.
         self.step_log: List[Dict] = []
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_tokens: int) -> Request:
         prompt = np.asarray(prompt, np.int64).ravel()
         # reject here, where the caller can handle it per-request — an
-        # admission-time failure would abort every in-flight request.
-        # Speculative forwards run the uniform width over every row, so
-        # a nearly-done row still needs draft headroom in its buffer.
-        headroom = 0 if self.mode == "greedy" else self.max_width
+        # admission-time failure would abort every in-flight request
+        headroom = self.adapter.headroom()
         if len(prompt) + int(max_tokens) + headroom > self.engine.max_len:
             raise ValueError(
                 f"request of {len(prompt)} prompt + {max_tokens} tokens "
@@ -118,24 +161,34 @@ class ServingLoop:
 
     def _admit(self) -> None:
         """Admission: fill free slots while every active request still
-        fits >= 1 position inside the budget."""
-        while (self.waiting and self.free_slots
-               and len(self.active) < max(1, self.budget())):
+        fits >= 1 position inside the budget, then prefill ALL newly
+        admitted slots in one bucketed batched forward."""
+        admitted: Dict[int, Request] = {}
+        ell = int(np.asarray(self.engine.slot_lens).max())
+        while self.waiting and self.free_slots:
+            # prospective budget once the head-of-queue prompt lands
+            cand = self.waiting[0]
+            ell_next = max(ell, len(cand.prompt), 1)
+            budget = self.engine.nfp_budget(self.eps, ell=ell_next)
+            if len(self.active) + len(admitted) >= max(1, budget):
+                break
             req = self.waiting.popleft()
             slot = self.free_slots.pop(0)
-            logits = self.engine.prefill_slot(slot, req.prompt)
+            req.slot = slot
+            admitted[slot] = req
+            ell = ell_next
+        if not admitted:
+            return
+        outs = self.engine.prefill_slots(
+            {s: r.prompt for s, r in admitted.items()})
+        for slot, req in admitted.items():
+            logits, hidden = outs[slot]
             req.pending = int(jnp.argmax(logits))
             req.generated = [req.pending]
-            req.slot = slot
             self.active[slot] = req
+            self.adapter.begin(req, hidden)
 
-    def _widths(self, n_active: int, budget: int) -> int:
-        """Split the position budget evenly across active requests."""
-        if self.mode == "greedy":
-            return 1
-        w = max(1, budget // max(n_active, 1))
-        return min(w, self.max_width)
-
+    # ------------------------------------------------------------------
     def _attn_slack(self, width: int) -> Optional[Dict]:
         """Model this forward's kernel-granularity slack: the ragged decode
         kernel's physical query rows / kv tiles vs the useful work of the
@@ -155,33 +208,12 @@ class ServingLoop:
             window=a.window if a.kind == "swa" else None,
             active=active)
 
-    # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """One scheduler iteration: admit, one batched forward, per-slot
-        accept/commit, retire finished requests.  Returns False when no
-        work remains."""
-        self._admit()
-        if not self.active:
-            return bool(self.waiting)
-        eng = self.engine
-        budget = self.budget()
-        width = self._widths(len(self.active), budget)
-        slots = sorted(self.active)
-        # --- build the (batch, width) token block ----------------------
-        tokens = np.zeros((eng.batch, width), np.int64)
-        drafts: Dict[int, np.ndarray] = {}
-        for s in slots:
-            req = self.active[s]
-            tokens[s, 0] = req.pending
-            # clip each row's drafts to its remaining tokens — budget
-            # positions past a request's max_tokens would be discarded
-            n_draft = min(width - 1,
-                          req.max_tokens - len(req.generated) - 1)
-            if n_draft > 0:
-                d = ngram_draft(np.append(req.context, req.pending),
-                                n_draft, vocab_size=eng.cfg.vocab_size)
-                drafts[s] = d
-                tokens[s, 1:1 + n_draft] = d
+    def shared_forward(self, tokens: np.ndarray, budget: int
+                       ) -> Tuple[Array, Dict, Array]:
+        """ONE batched multi-position decode forward over all slots,
+        WITHOUT committing; appends this forward's telemetry entry.
+        Returns (logits, new_cache, hidden)."""
+        width = tokens.shape[1]
         entry = {
             "active": len(self.active), "width": width,
             "positions": len(self.active) * width, "budget": budget,
@@ -197,24 +229,20 @@ class ServingLoop:
                 "kv_tile_util": slack["kv_tile_utilization"],
             })
         self.step_log.append(entry)
-        # --- one shared multi-position forward -------------------------
-        logits, new_cache = eng.decode_slots(jnp.asarray(tokens, jnp.int32))
-        preds = np.asarray(jnp.argmax(logits, axis=-1))     # (batch, width)
-        # --- per-slot greedy acceptance + commit -----------------------
-        advances = np.zeros((eng.batch,), np.int32)
-        for s in slots:
-            req = self.active[s]
-            k = 0
-            d = drafts.get(s)
-            if d is not None:
-                while k < len(d) and preds[s, k] == d[k]:
-                    k += 1
-                req.generated.extend(int(t) for t in d[:k])
-            bonus = int(preds[s, k])
-            req.generated.append(bonus)
-            advances[s] = 1 + k                  # pending + accepted drafts
-            req.pending = bonus
-        eng.commit_slots(new_cache, advances)
+        return self.engine.decode_slots(jnp.asarray(tokens, jnp.int32))
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration: admit (batched bucketed prefill),
+        let the adapter drive its shared forward(s) + per-slot commit,
+        retire finished requests.  Returns False when no work remains."""
+        self._admit()
+        if not self.active:
+            return bool(self.waiting)
+        budget = self.budget()
+        slots = sorted(self.active)
+        width = self.adapter.width(len(slots), budget)
+        self.adapter.run_step(slots, width, budget)
         # --- retire ----------------------------------------------------
         for s in slots:
             req = self.active[s]
@@ -222,7 +250,7 @@ class ServingLoop:
                 req.done = True
                 self.finished[req.rid] = req
                 del self.active[s]
-                eng.release_slot(s)
+                self.engine.release_slot(s)
                 self.free_slots.append(s)
         return bool(self.active or self.waiting)
 
@@ -249,6 +277,9 @@ class ServingLoop:
             "max_positions_per_forward": max(
                 (e["positions"] for e in self.step_log), default=0),
         }
+        prefills = self.engine.prefill_log[self._prefill_log_start:]
+        out["prefill_forwards"] = len(prefills)
+        out["prefill_buckets"] = sorted({e["bucket"] for e in prefills})
         slacked = [e for e in self.step_log if "kv_tile_util" in e]
         if slacked:
             out["mean_attn_row_util"] = (

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.algorithm import ParallelDecodeAlgorithm
+from repro.serving.algorithm import ParallelDecodeAlgorithm, SlotAdapter
 from repro.serving.engine import DecodeEngine
 
 Array = jax.Array
@@ -113,3 +113,26 @@ class SpeculativeDecoder(ParallelDecodeAlgorithm):
         if self.draft_engine is not None:
             return self._draft_propose(full, n)
         return ngram_draft(full, n, vocab_size=self.engine.cfg.vocab_size)
+
+
+class SpeculativeSlotAdapter(SlotAdapter):
+    """Scheduler-side speculative decoding: the remaining NFP budget is
+    split evenly into per-request n-gram verification windows (ASPD-style
+    adaptive splitting) — a lone request gets the whole budget, a full
+    house degrades gracefully to width 1.  Greedy prefix acceptance per
+    row keeps every stream lossless."""
+
+    mode = "speculative"
+
+    def width(self, n_active: int, budget: int) -> int:
+        w = max(1, budget // max(n_active, 1))
+        return min(w, self.loop.max_width)
+
+    def headroom(self) -> int:
+        # the shared forward runs the uniform width over every row, so a
+        # nearly-done row still needs draft headroom in its cache buffer
+        return self.loop.max_width
+
+    def propose(self, req, n: int) -> np.ndarray:
+        return ngram_draft(np.append(req.context, req.pending), n,
+                           vocab_size=self.loop.engine.cfg.vocab_size)

@@ -29,7 +29,8 @@ def loss_fn(params, cfg: ArchConfig, batch: Dict, aux_weight: float = 0.01,
         fwd_in["tokens"] = batch["tokens"]
     if "frames" in batch:            # audio: stub frontend frame embeddings
         fwd_in["frames"] = batch["frames"]
-    logits, _, aux = forward(params, cfg, fwd_in, mode="train", remat=remat)
+    logits, _, aux, _ = forward(params, cfg, fwd_in, mode="train",
+                                remat=remat)
     ce = softmax_cross_entropy(logits[:, :-1], batch["tokens"][:, 1:],
                                batch.get("mask"))
     return ce + aux_weight * aux, {"ce": ce, "moe_aux": aux}

@@ -35,7 +35,7 @@ def test_smoke_forward(arch):
     cfg = get_config(arch, reduced=True)
     params = init_model(KEY, cfg)
     b, s = 2, 16
-    logits, _, aux = forward(params, cfg, _inputs(cfg, b, s), mode="train")
+    logits, _, aux, _ = forward(params, cfg, _inputs(cfg, b, s), mode="train")
     assert logits.shape == (b, s, cfg.vocab_size)
     assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
     assert not bool(jnp.isnan(aux))
@@ -69,12 +69,12 @@ def test_smoke_decode(arch):
     b, s, n = 2, 12, 4
     cache = init_cache(cfg, b, s + n)
     inp = _inputs(cfg, b, s)
-    _, cache, _ = forward(params, cfg, inp, mode="prefill", cache=cache,
+    _, cache, _, _ = forward(params, cfg, inp, mode="prefill", cache=cache,
                           cache_len=0)
     dec_in = _inputs(cfg, b, n, key=jax.random.PRNGKey(7))
     if cfg.encoder is not None:
         dec_in["frames"] = inp["frames"]
-    logits, cache2, _ = forward(params, cfg, dec_in, mode="decode",
+    logits, cache2, _, _ = forward(params, cfg, dec_in, mode="decode",
                                 cache=cache,
                                 cache_len=jnp.asarray(s, jnp.int32))
     assert logits.shape == (b, n, cfg.vocab_size)
@@ -94,11 +94,11 @@ def test_prefill_decode_matches_full_forward(arch):
     b, s, n = 2, 12, 4
     toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + n), 0,
                               cfg.vocab_size)
-    full, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
+    full, _, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
     cache = init_cache(cfg, b, s + n)
-    _, cache, _ = forward(params, cfg, {"tokens": toks[:, :s]},
+    _, cache, _, _ = forward(params, cfg, {"tokens": toks[:, :s]},
                           mode="prefill", cache=cache, cache_len=0)
-    dec, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
+    dec, _, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
                         cache=cache, cache_len=jnp.asarray(s, jnp.int32))
     a = np.asarray(full[:, s:], np.float32)
     c = np.asarray(dec, np.float32)
@@ -113,11 +113,11 @@ def test_mla_consistency_f32():
     b, s, n = 2, 12, 4
     toks = jax.random.randint(jax.random.PRNGKey(2), (b, s + n), 0,
                               cfg.vocab_size)
-    full, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
+    full, _, _, _ = forward(params, cfg, {"tokens": toks}, mode="train")
     cache = init_cache(cfg, b, s + n, dtype=jnp.float32)
-    _, cache, _ = forward(params, cfg, {"tokens": toks[:, :s]},
+    _, cache, _, _ = forward(params, cfg, {"tokens": toks[:, :s]},
                           mode="prefill", cache=cache, cache_len=0)
-    dec, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
+    dec, _, _, _ = forward(params, cfg, {"tokens": toks[:, s:]}, mode="decode",
                         cache=cache, cache_len=jnp.asarray(s, jnp.int32))
     a = np.asarray(full[:, s:], np.float32)
     c = np.asarray(dec, np.float32)
@@ -133,8 +133,8 @@ def test_swa_window_masks_old_tokens():
     t1 = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab_size)
     # perturb a token far outside the window of the last position
     t2 = t1.at[0, 2].set((t1[0, 2] + 1) % cfg.vocab_size)
-    l1, _, _ = forward(params, cfg, {"tokens": t1}, mode="train")
-    l2, _, _ = forward(params, cfg, {"tokens": t2}, mode="train")
+    l1, _, _, _ = forward(params, cfg, {"tokens": t1}, mode="train")
+    l2, _, _, _ = forward(params, cfg, {"tokens": t2}, mode="train")
     # windowed attention -> last position unaffected... through attention;
     # (the MoE router is also token-local, so only position 2 changes)
     np.testing.assert_allclose(np.asarray(l1[0, -1], np.float32),
@@ -168,7 +168,7 @@ def test_swa_ring_buffer_matches_full_cache():
         cl = jnp.zeros((), jnp.int32)
         outs, pos = [], 0
         for nb in blocks:
-            lg, cache, _ = forward(params, cfg,
+            lg, cache, _, _ = forward(params, cfg,
                                    {"tokens": toks[:, pos:pos + nb]},
                                    mode="decode", cache=cache, cache_len=cl,
                                    swa_ring=swa_ring)
