@@ -19,6 +19,12 @@ utilization, kv tiles skipped by the per-row ragged bounds) next to the
 per serving step.  Without --kernel the XLA reference path runs and no
 slack columns are emitted (there is no tiling to measure).
 
+The shared-prefix section (``--prefix-only`` to run alone,
+``--no-prefix`` to skip) serves one common prompt head + unique tails
+through dense vs paged(+prefix-cache) engines: the paged rows report
+prefix hits and the prompt positions prefill never had to compute —
+the serving-side win of the paged KV cache (docs/benchmarks.md).
+
 Run:  PYTHONPATH=src python -m benchmarks.serving_throughput --kernel
       (interpret mode on CPU — slower, identical tokens)
 """
@@ -32,7 +38,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_model
-from repro.serving import DecodeEngine, ServingLoop, init_mtp_heads
+from repro.serving import (DecodeEngine, PagedKVConfig, ServingLoop,
+                           init_mtp_heads)
 
 from benchmarks.common import emit
 
@@ -40,6 +47,11 @@ ARCH = "stablelm_3b"
 PROMPT_LEN = 8
 TOKENS = 24
 MAX_LEN = 256
+# shared-prefix workload: a system-prompt-like common prefix + short
+# unique tails — the traffic shape prefix caching exists for
+PREFIX_LEN = 48
+TAIL_LEN = 6
+KV_BLOCK = 16
 
 
 def _mode_kwargs(cfg, mode: str):
@@ -52,15 +64,19 @@ def _mode_kwargs(cfg, mode: str):
 
 
 def _run_once(cfg, params, n_requests: int, mode: str, max_width: int,
-              use_kernel: bool):
-    slots = min(n_requests, 8)
+              use_kernel: bool, paged=None, prompts=None, slots=None):
+    slots = slots or min(n_requests, 8)
     eng = DecodeEngine(cfg, params, batch=slots, max_len=MAX_LEN,
-                       use_kernel=use_kernel)
+                       use_kernel=use_kernel, paged=paged)
     loop = ServingLoop(eng, mode=mode, max_width=max_width,
                        **_mode_kwargs(cfg, mode))
     for i in range(n_requests):
-        prompt = np.asarray(jax.random.randint(
-            jax.random.PRNGKey(100 + i), (PROMPT_LEN,), 0, cfg.vocab_size))
+        if prompts is not None:
+            prompt = prompts[i]
+        else:
+            prompt = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(100 + i), (PROMPT_LEN,), 0,
+                cfg.vocab_size))
         loop.submit(prompt, TOKENS)
     t0 = time.time()
     loop.run()
@@ -77,7 +93,7 @@ def _serve(cfg, params, n_requests: int, mode: str, max_width: int = 8,
 
 
 def run(modes=("greedy", "speculative", "mtp", "diffusion"),
-        use_kernel: bool = False) -> None:
+        use_kernel: bool = False, prefix: bool = True) -> None:
     cfg = get_config(ARCH, reduced=True)
     params = init_model(jax.random.PRNGKey(0), cfg)
     for mode in modes:
@@ -96,6 +112,54 @@ def run(modes=("greedy", "speculative", "mtp", "diffusion"),
             emit(f"serving_throughput/{mode}/req{n_req}", us_fwd,
                  f"tok_s={tput:.1f};tok_fwd={stats['tokens_per_forward']:.2f};"
                  f"max_pos={stats['max_positions_per_forward']}" + slack)
+    if prefix:
+        run_shared_prefix(cfg, params, use_kernel=use_kernel)
+
+
+def run_shared_prefix(cfg=None, params=None, n_requests: int = 8,
+                      use_kernel: bool = False) -> None:
+    """Shared-prefix workload: every request = one common PREFIX_LEN
+    prompt head + a unique TAIL_LEN tail (multi-user traffic over one
+    system prompt), streamed through 2 slots so admissions stagger and
+    later requests find the head resident.  Dense serving prefills the
+    shared head once per request; the paged cache's prefix hits skip it
+    after the first admission — the ``derived`` column shows the prompt
+    positions prefill actually computed (``prefill_pos``) vs the
+    positions the cache absorbed (``prefill_saved``)."""
+    if cfg is None:
+        cfg = get_config(ARCH, reduced=True)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    head = rng.integers(0, cfg.vocab_size, size=PREFIX_LEN)
+    prompts = [np.concatenate([head,
+                               rng.integers(0, cfg.vocab_size,
+                                            size=TAIL_LEN)])
+               for _ in range(n_requests)]
+    variants = [
+        ("dense", None),
+        ("paged", PagedKVConfig(block_size=KV_BLOCK)),
+        ("paged_nocache", PagedKVConfig(block_size=KV_BLOCK,
+                                        prefix_cache=False)),
+    ]
+    for name, paged in variants:
+        # warmup pass compiles this variant's buckets; timed pass below
+        _run_once(cfg, params, n_requests, "greedy", 8, use_kernel,
+                  paged=paged, prompts=prompts, slots=2)
+        loop, stats, dt = _run_once(cfg, params, n_requests, "greedy", 8,
+                                    use_kernel, paged=paged,
+                                    prompts=prompts, slots=2)
+        extra = ""
+        if paged is not None:
+            extra = (f";prefix_hits={stats['prefix_hits']}"
+                     f"/{stats['prefix_lookups']}"
+                     f";prefill_saved={stats['prefill_positions_saved']}"
+                     f";blocks_peak={stats['kv_blocks_peak']}"
+                     f";cow={stats['cow_copies']}")
+        emit(f"serving_throughput/prefix/{name}/req{n_requests}",
+             dt / max(stats["forwards"], 1) * 1e6,
+             f"tok_s={stats['tokens'] / max(dt, 1e-9):.1f}"
+             f";prefill_forwards={stats['prefill_forwards']}"
+             f";prefill_pos={stats['prefill_positions_computed']}" + extra)
 
 
 def main() -> None:
@@ -104,9 +168,18 @@ def main() -> None:
     ap.add_argument("--kernel", action="store_true",
                     help="serve through the Pallas ragged decode kernel "
                          "(interpret mode on CPU)")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the shared-prefix paged-vs-dense "
+                         "workload")
+    ap.add_argument("--no-prefix", action="store_true",
+                    help="skip the shared-prefix workload")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(tuple(args.modes.split(",")), use_kernel=args.kernel)
+    if args.prefix_only:
+        run_shared_prefix(use_kernel=args.kernel)
+    else:
+        run(tuple(args.modes.split(",")), use_kernel=args.kernel,
+            prefix=not args.no_prefix)
 
 
 if __name__ == "__main__":

@@ -150,25 +150,50 @@ def mxu_padded_rows(m: int, dtype_bytes: int = 2) -> int:
     return round_up(m, sublane)
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV block granularity.  With a paged cache the kv sequence is
+# read (and, on the Pallas path, tiled) in fixed-size blocks, so the
+# attended cache length is quantized up to the page boundary — a second
+# attention-side granularity next to the query tile, entering the NFP
+# idle term through ``core.nfp.n_idle_attn_general(kv_page=...)``.
+# ---------------------------------------------------------------------------
+
+
+def kv_padded_len(ell: int, kv_page: int) -> int:
+    """Cache positions physically touched for ``ell`` logical positions
+    under a ``kv_page``-sized paged cache (0 = dense, no quantization)."""
+    if kv_page <= 0:
+        return ell
+    return round_up(max(ell, 1), kv_page)
+
+
 @dataclass(frozen=True)
 class GranularitySpec:
-    """Bundle of granularity parameters for one backend configuration."""
+    """Bundle of granularity parameters for one backend configuration.
+
+    ``kv_page`` is the paged-KV block size in positions (0 when the
+    dense cache is in use) — the paging granularity knob the NFP
+    attention idle term accounts for.
+    """
 
     m_attn: int
     m_moe: int
     tau: int
     m_ssm: int
     attn_policy: str = ATTN_POLICY_FIXED
+    kv_page: int = 0
 
     @classmethod
     def for_backend(cls, n_experts: int = 0,
                     attn_policy: str = ATTN_POLICY_FIXED,
                     head_dim: int = 128,
-                    quant: str = "bf16") -> "GranularitySpec":
+                    quant: str = "bf16",
+                    kv_page: int = 0) -> "GranularitySpec":
         return cls(
             m_attn=m_attn(head_dim, attn_policy),
             m_moe=m_moe(max(n_experts, 1), quant),
             tau=moe_tau(n_experts) if n_experts else 0,
             m_ssm=m_ssm(),
             attn_policy=attn_policy,
+            kv_page=kv_page,
         )

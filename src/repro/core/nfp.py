@@ -24,7 +24,7 @@ from typing import Dict, Optional
 
 from repro.core.arch import (LAYER_ATTN, LAYER_HYBRID, LAYER_SSM, ArchConfig,
                              AttentionSpec)
-from repro.core.granularity import GranularitySpec
+from repro.core.granularity import GranularitySpec, kv_padded_len
 from repro.core.hardware import BYTES_BF16, HardwareSpec
 
 ETA_COMBINE = 2  # paper footnote 2: per-expert activation accesses in combine
@@ -80,15 +80,24 @@ def n_idle_attn(rho: float, ell: int, s: int = BYTES_BF16) -> float:
 
 
 def n_idle_attn_general(rho: float, ell: int, attn: AttentionSpec,
-                        s: int = BYTES_BF16) -> float:
+                        s: int = BYTES_BF16, kv_page: int = 0) -> float:
     """Generalized Eq. 22 for GQA / MLA / SWA geometries.
 
     C(N)   = 2*b*N*L_eff*h*(d_qk + d_v)      (scores + AV)
     B(N)   = b*(L_eff+N)*kv_bytes_per_token  (KV-cache traffic)
     solve AI(N) = rho for N.  Reduces exactly to Eq. 22 for MHA.
+
+    ``kv_page`` > 0 models a PAGED cache: the committed cache is read
+    (and tiled) in whole blocks, so the effective attended length is
+    L_eff rounded up to the page boundary — both the per-position FLOPs
+    and the KV bytes grow with the padded length, which shifts the idle
+    boundary DOWN slightly (toward the rho*kv_b/(2*h*(d_qk+d_v))
+    asymptote).  This is the paging-induced boundary shift
+    ``predict_model`` reports when the engine serves a paged cache.
     """
     if attn.kind == "swa" and attn.window is not None:
         ell = min(ell, attn.window)
+    ell = kv_padded_len(ell, kv_page)
     d_qk, d_v = attn.score_dims
     c_per = 2.0 * ell * attn.n_heads * (d_qk + d_v)         # FLOPs / position
     kv_b = float(attn.kv_cache_bytes_per_token)
@@ -198,7 +207,8 @@ def predict_model(cfg: ArchConfig, hw: HardwareSpec, gran: GranularitySpec,
 
     if has_attn:
         terms["attn_tile"] = float(gran.m_attn)
-        idle_terms["attn"] = n_idle_attn_general(hw.rho, ell, cfg.attention, s)
+        idle_terms["attn"] = n_idle_attn_general(hw.rho, ell, cfg.attention, s,
+                                                 kv_page=gran.kv_page)
 
     if has_ssm:
         terms["ssm_idle"] = n_idle_ssm(hw.rho, b, s)

@@ -80,8 +80,10 @@ def _attn_kernel(cache_lens_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         rows = g * q_block
         q = q_ref[0, 0].reshape(rows, q_ref.shape[-1]).astype(jnp.float32)
-        k = k_ref[0, 0].astype(jnp.float32)                 # (kb, dh)
-        v = v_ref[0, 0].astype(jnp.float32)
+        # dense layout blocks are (1, 1, kb, dh); paged pool blocks are
+        # (1, kb, dh) — flatten either to the (kb, dh) tile
+        k = k_ref[...].reshape(k_block, k_ref.shape[-1]).astype(jnp.float32)
+        v = v_ref[...].reshape(k_block, v_ref.shape[-1]).astype(jnp.float32)
 
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -179,3 +181,85 @@ def decode_attention_pallas(q, k, v, cache_lens, *, q_block: int,
         out_shape=jax.ShapeDtypeStruct((b, kv, g, n_pad, dh), q.dtype),
         interpret=interpret,
     )(cache_lens, q, k, v)
+
+
+def decode_attention_paged_pallas(q, k_pool, v_pool, cache_lens,
+                                  block_tables, *, q_block: int,
+                                  block_size: int, scale: float,
+                                  window: Optional[int] = None,
+                                  n_logical: Optional[int] = None,
+                                  interpret: bool = False):
+    """Block-table-indexed variant: the KV cache is a GLOBAL paged pool.
+
+    q: (b, kv, g, n_pad, dh); k_pool/v_pool: (kv, n_phys*block_size, dh)
+    — the refcounted block pool flattened along the position axis, one
+    physical page per kv tile (the page size IS this launch's k_block);
+    cache_lens: (b,) i32; block_tables: (b, max_blocks) i32 mapping row
+    b's LOGICAL kv tile ij to a physical page.
+
+    This is the (b,) ``cache_lens`` scalar-prefetch machinery
+    generalized one step: a SECOND prefetch operand carries the block
+    tables, and the K/V BlockSpec index map — the same per-row
+    useful-tile clamp as the ragged dense kernel — returns
+    ``bt[ib, clamp(ij)]`` instead of ``clamp(ij)``, so the DMA engine
+    walks each row's (arbitrarily fragmented) page list while the
+    in-kernel masks keep operating in LOGICAL positions.  The tile-skip
+    rule (and therefore ``ops.slack_report``) is unchanged: a skipped
+    grid step revisits the row's last useful page, and Pallas elides
+    the copy when the physical page index is unchanged.  Rows whose
+    table entries point at the trailing trash page (inactive slots)
+    read junk that the causal mask zeroes out exactly.
+    """
+    b, kv, g, n_pad, dh = q.shape
+    n_q_tiles = n_pad // q_block
+    n_kv_tiles = block_tables.shape[1]
+    grid = (b, kv, n_q_tiles, n_kv_tiles)
+
+    n_log = n_pad if n_logical is None else n_logical
+    kernel = functools.partial(
+        _attn_kernel, q_block=q_block, k_block=block_size, g=g, scale=scale,
+        window=window, n_kv_tiles=n_kv_tiles, n_logical=n_log)
+
+    def paged_kernel(lens_ref, bt_ref, *refs, **kw):
+        # the block tables only steer the index maps; the kernel body is
+        # the ragged kernel unchanged (it masks in logical positions)
+        del bt_ref
+        return kernel(lens_ref, *refs, **kw)
+
+    def kv_index(ib, ik, iq, ij, lens_ref, bt_ref):
+        # identical useful-range clamp to the dense ragged kernel, then
+        # mapped through the row's block table: logical tile -> physical
+        # page.  Entries inside the clamp range are always valid pages
+        # (allocated, or the trash page for inactive rows).
+        last = jnp.maximum(
+            (lens_ref[ib] + jnp.minimum(n_log, (iq + 1) * q_block)
+             + block_size - 1) // block_size - 1, 0)
+        idx = jnp.minimum(ij, last)
+        if window is not None:
+            first = jnp.maximum(
+                (lens_ref[ib] + iq * q_block - window + 1) // block_size, 0)
+            idx = jnp.maximum(idx, jnp.minimum(first, last))
+        return (ik, bt_ref[ib, idx], 0)
+
+    return pl.pallas_call(
+        paged_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, g, q_block, dh),
+                             lambda ib, ik, iq, ij, *_: (ib, ik, 0, iq, 0)),
+                pl.BlockSpec((1, block_size, dh), kv_index),
+                pl.BlockSpec((1, block_size, dh), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, q_block, dh),
+                                   lambda ib, ik, iq, ij, *_: (ib, ik, 0, iq, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g * q_block, 1), jnp.float32),   # running max
+                pltpu.VMEM((g * q_block, 1), jnp.float32),   # running sum
+                pltpu.VMEM((g * q_block, dh), jnp.float32),  # accumulator
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, n_pad, dh), q.dtype),
+        interpret=interpret,
+    )(cache_lens, block_tables, q, k_pool, v_pool)

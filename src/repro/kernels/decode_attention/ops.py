@@ -9,10 +9,19 @@ is exactly the granularity the NFP predictor reads from
 ``core.granularity``.  ``decode_attention`` keeps the original aligned
 (scalar ``total_len``) signature and is a broadcast of the ragged path.
 
+``decode_attention_paged`` serves the scheduler's PAGED cache: K/V live
+in a global refcounted block pool and a (b, max_blocks) block table
+(second scalar-prefetch operand) maps each row's logical kv tile to a
+physical page — the page size is that launch's k_block, so paging slots
+straight into the same tile-skip machinery.
+
 ``slack_report`` models the kernel's physical work for one forward in
 plain numpy — useful vs padded query rows, and executed vs grid kv tiles
 under the kernel's per-row skip rule — so serving telemetry can place
 MEASURED per-step granularity slack next to the ``core.nfp`` prediction.
+The same rule covers the paged launch (pass ``k_block=block_size`` and
+the block-table-covered ``s_max``): tile skipping is decided in logical
+positions, independent of which physical page a tile maps to.
 """
 from __future__ import annotations
 
@@ -24,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.granularity import cdiv, round_up, select_q_block
-from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_paged_pallas, decode_attention_pallas)
 
 K_BLOCK = 128
 
@@ -69,6 +79,49 @@ def decode_attention_ragged(q, k_cache, v_cache, cache_lens, *,
     o = decode_attention_pallas(qk, kk, vk, lens, q_block=q_block,
                                 k_block=k_block, scale=scale, window=window,
                                 n_logical=n, interpret=interpret)
+    return o[:, :, :, :n].transpose(0, 3, 1, 2, 4).reshape(b, n, h, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "q_block_override",
+                                             "interpret"))
+def decode_attention_paged(q, k_pool, v_pool, cache_lens, block_tables, *,
+                           window: Optional[int] = None,
+                           q_block_override: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Paged-pool kernel entry the scheduler's paged cache serves.
+
+    q: (b, n, h, dh); k_pool/v_pool: (n_phys, bs, kv, dh) — the global
+    refcounted block pool (``serving.paged``), whose page size ``bs``
+    becomes this launch's kv tile (k_block); cache_lens: (b,) committed
+    lengths; block_tables: (b, max_blocks) i32 logical->physical page
+    map per row (unassigned entries point at the trailing trash page).
+
+    Row b's N query positions sit at cache_lens[b] .. cache_lens[b]+N-1
+    in LOGICAL positions; their K/V must already be scattered into the
+    pool at the pages the table names.  Returns (b, n, h, dh).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, n, h, dh = q.shape
+    n_phys, bs, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    q_block = q_block_override or select_q_block(n, dh)
+    n_pad = round_up(n, q_block)
+    scale = 1.0 / (dh ** 0.5)
+
+    qk = q.reshape(b, n, kv, g, dh).transpose(0, 2, 3, 1, 4)   # (b,kv,g,n,dh)
+    qk = jnp.pad(qk, ((0, 0), (0, 0), (0, 0), (0, n_pad - n), (0, 0)))
+    # pool -> (kv, n_phys*bs, dh): one physical page per kv-tile DMA
+    kk = k_pool.transpose(2, 0, 1, 3).reshape(kv, n_phys * bs, dh)
+    vk = v_pool.transpose(2, 0, 1, 3).reshape(kv, n_phys * bs, dh)
+    lens = jnp.broadcast_to(
+        jnp.asarray(cache_lens, jnp.int32).reshape(-1), (b,))
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    o = decode_attention_paged_pallas(qk, kk, vk, lens, bt, q_block=q_block,
+                                      block_size=bs, scale=scale,
+                                      window=window, n_logical=n,
+                                      interpret=interpret)
     return o[:, :, :, :n].transpose(0, 3, 1, 2, 4).reshape(b, n, h, dh)
 
 

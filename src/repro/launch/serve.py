@@ -27,8 +27,8 @@ from repro.configs import get_config
 from repro.core import get_hardware
 from repro.models import init_model
 from repro.serving import (DecodeEngine, DiffusionBlockDecoder,
-                           MTPDecoder, ServingLoop, SpeculativeDecoder,
-                           init_mtp_heads)
+                           MTPDecoder, PagedKVConfig, ServingLoop,
+                           SpeculativeDecoder, init_mtp_heads)
 
 
 def _single_request(args, cfg, params) -> None:
@@ -60,9 +60,13 @@ def _single_request(args, cfg, params) -> None:
 
 
 def _multi_request(args, cfg, params) -> None:
+    paged = None
+    if args.kv_block_size > 0:
+        paged = PagedKVConfig(block_size=args.kv_block_size,
+                              n_blocks=args.kv_blocks or None)
     eng = DecodeEngine(cfg, params, batch=args.slots, max_len=args.max_len,
                        hardware=get_hardware(args.hardware),
-                       use_kernel=args.use_kernel)
+                       use_kernel=args.use_kernel, paged=paged)
     kwargs = {}
     if args.serve_mode == "mtp":
         kwargs["mtp_heads"] = init_mtp_heads(
@@ -87,6 +91,12 @@ def _multi_request(args, cfg, params) -> None:
           f"{s['tokens_per_forward']:.2f} tok/fwd, "
           f"max {s['max_positions_per_forward']} positions/fwd)")
     print(f"throughput: {s['tokens'] / max(dt, 1e-9):.1f} tok/s")
+    if paged is not None:
+        print(f"paged kv: block_size={s['kv_block_size']} "
+              f"blocks={s['kv_blocks']} peak_used={s['kv_blocks_peak']}  "
+              f"prefix: {s['prefix_hits']}/{s['prefix_lookups']} hits, "
+              f"{s['prefill_positions_saved']} prefill positions saved, "
+              f"{s['cow_copies']} cow, {s['prefix_evictions']} evictions")
     for rid, toks in list(results.items())[:4]:
         print(f"  req {rid}: {toks[:16]} ...")
 
@@ -113,7 +123,19 @@ def main() -> None:
     ap.add_argument("--serve-mode", default="greedy",
                     choices=["greedy", "speculative", "diffusion", "mtp"],
                     help="scheduler mode for --requests")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV cache block size in positions "
+                         "(0 = dense per-slot cache); must divide "
+                         "--max-len; multi-request mode only")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="paged KV pool size in blocks (0 = dense-"
+                         "parity default: slots * max_len / block)")
     args = ap.parse_args()
+    if args.kv_block_size > 0 and args.requests <= 0:
+        ap.error("--kv-block-size serves the multi-request scheduler; "
+                 "add --requests N")
+    if args.kv_blocks > 0 and args.kv_block_size <= 0:
+        ap.error("--kv-blocks sizes the paged pool; add --kv-block-size")
 
     cfg = get_config(args.arch, reduced=args.tiny)
     params = init_model(jax.random.PRNGKey(0), cfg)

@@ -70,6 +70,24 @@ def init_kv_cache(batch: int, max_len: int, a: AttentionSpec,
     }
 
 
+def init_paged_kv_cache(n_phys: int, block_size: int, a: AttentionSpec,
+                        dtype=jnp.bfloat16) -> Dict:
+    """Paged decode cache: a GLOBAL pool of ``n_phys`` blocks of
+    ``block_size`` positions, shared by all slots through per-slot block
+    tables (``serving.paged.BlockManager``).  The last block is the
+    write-dump page unattached table entries point at."""
+    if a.kind == "mla":
+        return {
+            "latent": jnp.zeros((n_phys, block_size, a.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((n_phys, block_size, a.qk_rope_head_dim),
+                                dtype),
+        }
+    return {
+        "k": jnp.zeros((n_phys, block_size, a.n_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((n_phys, block_size, a.n_kv_heads, a.head_dim), dtype),
+    }
+
+
 # ===========================================================================
 # Attention cores
 # ===========================================================================
@@ -107,6 +125,45 @@ def _update_rows(cache: Array, new: Array, offsets: Array) -> Array:
         start = (off,) + (0,) * (c.ndim - 1)
         return jax.lax.dynamic_update_slice(c, x, start)
     return jax.vmap(one)(cache, new, offsets)
+
+
+def _paged_write_idx(block_tables: Array, q_pos: Array, block_size: int,
+                     n_phys: int) -> Array:
+    """Flat pool slots (page*block_size + offset) for per-row positions
+    (b, n).  Positions past the table's coverage — e.g. junk rows of a
+    width-bucketed batched forward on an inactive slot — fall through to
+    the trailing trash page, never a live block."""
+    b, max_blocks = block_tables.shape
+    blk_idx = jnp.clip(q_pos // block_size, 0, max_blocks - 1)
+    page = jnp.take_along_axis(block_tables, blk_idx, axis=1)
+    page = jnp.where(q_pos < max_blocks * block_size, page, n_phys - 1)
+    return page * block_size + q_pos % block_size
+
+
+def _paged_update(pool: Array, new: Array, flat_idx: Array) -> Array:
+    """Scatter ``new`` (b, n, ...) into the pool (n_phys, bs, ...) at
+    flat slot indices (b, n).  Live-block destinations are disjoint by
+    construction (writes require refcount-1 ownership; see
+    ``serving.paged``); only trash-page slots may collide, where the
+    winner is irrelevant."""
+    n_phys, bs = pool.shape[0], pool.shape[1]
+    flat = pool.reshape((n_phys * bs,) + pool.shape[2:])
+    flat = flat.at[flat_idx.reshape(-1)].set(
+        new.reshape((-1,) + new.shape[2:]))
+    return flat.reshape(pool.shape)
+
+
+def _paged_gather(pool: Array, block_tables: Array) -> Array:
+    """Materialize each row's VIRTUAL contiguous cache from the pool:
+    (n_phys, bs, ...) + (b, max_blocks) -> (b, max_blocks*bs, ...).
+    The XLA reference path for paged decode — the Pallas path never
+    materializes this, its DMA index map walks the table instead."""
+    n_phys, bs = pool.shape[0], pool.shape[1]
+    b, max_blocks = block_tables.shape
+    flat = pool.reshape((n_phys * bs,) + pool.shape[2:])
+    idx = (block_tables[:, :, None] * bs
+           + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    return flat[idx.reshape(b, max_blocks * bs)]
 
 
 def _causal_mask(q_pos: Array, kv_pos: Array,
@@ -198,6 +255,51 @@ def gqa_decode(params, a: AttentionSpec, x: Array, cache: Dict,
         ctx = _gqa_core(q, k_cache, v_cache, mask, scale)
     out = ctx.reshape(b, n, -1) @ params["wo"]
     return out, {"k": k_cache, "v": v_cache}
+
+
+def gqa_decode_paged(params, a: AttentionSpec, x: Array, cache: Dict,
+                     cache_len, block_tables: Array, theta: float,
+                     use_kernel: bool = False) -> Tuple[Array, Dict]:
+    """Paged multi-position decode: the cache is a global block pool
+    (``init_paged_kv_cache``) indexed through per-row block tables.
+
+    Identical math to ``gqa_decode`` — the N new positions' K/V are
+    scattered to the pages the table names, then attention runs over
+    each row's virtual cache (gathered for the XLA path; walked by the
+    block-table DMA index map on the Pallas path).  Junk rows of a
+    batched forward write to the trash page, so a live block is only
+    ever written by the slot that owns it.
+    """
+    b, n, d = x.shape
+    bs = cache["k"].shape[1]
+    n_phys = cache["k"].shape[0]
+    offsets = _row_offsets(cache_len, b)
+    q_pos = offsets[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    q = (x @ params["wq"]).reshape(b, n, a.n_heads, a.head_dim)
+    k = (x @ params["wk"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    v = (x @ params["wv"]).reshape(b, n, a.n_kv_heads, a.head_dim)
+    q = apply_rope(q, q_pos, theta)
+    k = apply_rope(k, q_pos, theta)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    flat_idx = _paged_write_idx(bt, q_pos, bs, n_phys)
+    k_pool = _paged_update(cache["k"], k, flat_idx)
+    v_pool = _paged_update(cache["v"], v, flat_idx)
+    window = a.window if a.kind == "swa" else None
+    scale = 1.0 / (a.head_dim ** 0.5)
+    if use_kernel:
+        from repro.kernels.decode_attention.ops import decode_attention_paged
+        ctx = decode_attention_paged(q, k_pool, v_pool, offsets, bt,
+                                     window=window)
+    else:
+        k_virt = _paged_gather(k_pool, bt)
+        v_virt = _paged_gather(v_pool, bt)
+        s_virt = k_virt.shape[1]
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(s_virt, dtype=jnp.int32)[None, :], (b, s_virt))
+        mask = _causal_mask(q_pos, kv_pos, window)
+        ctx = _gqa_core(q, k_virt, v_virt, mask, scale)
+    out = ctx.reshape(b, n, -1) @ params["wo"]
+    return out, {"k": k_pool, "v": v_pool}
 
 
 def gqa_decode_ring(params, a: AttentionSpec, x: Array, cache: Dict,
@@ -351,6 +453,45 @@ def mla_decode(params, a: AttentionSpec, x: Array, cache: Dict,
     return out, {"latent": latent, "k_rope": k_rope}
 
 
+def mla_decode_paged(params, a: AttentionSpec, x: Array, cache: Dict,
+                     cache_len, block_tables: Array, theta: float
+                     ) -> Tuple[Array, Dict]:
+    """Absorbed MLA decode over a paged latent pool (XLA path only —
+    the Pallas kernel serves GQA/SWA geometries, as in the dense case)."""
+    b, n, _ = x.shape
+    bs = cache["latent"].shape[1]
+    n_phys = cache["latent"].shape[0]
+    offsets = _row_offsets(cache_len, b)
+    q_pos = offsets[:, None] + jnp.arange(n, dtype=jnp.int32)[None, :]
+    q_nope, q_rope = _mla_q(params, a, x, q_pos, theta)
+    latent_new, k_rope_new = _mla_latent(params, a, x, q_pos, theta)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    flat_idx = _paged_write_idx(bt, q_pos, bs, n_phys)
+    latent_pool = _paged_update(cache["latent"], latent_new, flat_idx)
+    k_rope_pool = _paged_update(cache["k_rope"], k_rope_new, flat_idx)
+    latent = _paged_gather(latent_pool, bt)
+    k_rope = _paged_gather(k_rope_pool, bt)
+    s_virt = latent.shape[1]
+    wkv_b = params["wkv_b"].reshape(a.kv_lora_rank, a.n_heads,
+                                    a.qk_nope_head_dim + a.v_head_dim)
+    wk = wkv_b[..., : a.qk_nope_head_dim]
+    wv = wkv_b[..., a.qk_nope_head_dim:]
+    q_lat = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk)
+    scores = (jnp.einsum("bqhl,bsl->bhqs", q_lat, latent)
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope))
+    scale = 1.0 / ((a.qk_nope_head_dim + a.qk_rope_head_dim) ** 0.5)
+    kv_pos = jnp.broadcast_to(jnp.arange(s_virt, dtype=jnp.int32)[None, :],
+                              (b, s_virt))
+    mask = _causal_mask(q_pos, kv_pos)
+    scores = jnp.where(mask[:, None, :, :], scores.astype(jnp.float32) * scale,
+                       -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", probs, latent)
+    ctx = jnp.einsum("bqhl,lhd->bqhd", ctx_lat, wv)
+    out = ctx.reshape(b, n, -1) @ params["wo"]
+    return out, {"latent": latent_pool, "k_rope": k_rope_pool}
+
+
 # ===========================================================================
 # Dispatch
 # ===========================================================================
@@ -364,7 +505,14 @@ def attention_full(params, a: AttentionSpec, x, positions, theta,
 
 
 def attention_decode(params, a: AttentionSpec, x, cache, cache_len, theta,
-                     use_kernel: bool = False, swa_ring: bool = False):
+                     use_kernel: bool = False, swa_ring: bool = False,
+                     block_tables=None):
+    if block_tables is not None:
+        if a.kind == "mla":
+            return mla_decode_paged(params, a, x, cache, cache_len,
+                                    block_tables, theta)
+        return gqa_decode_paged(params, a, x, cache, cache_len, block_tables,
+                                theta, use_kernel)
     if a.kind == "mla":
         return mla_decode(params, a, x, cache, cache_len, theta)
     if swa_ring and a.kind == "swa":

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from repro.core.arch import (LAYER_ATTN, LAYER_HYBRID, LAYER_SSM, ArchConfig)
 from repro.models.attention import (attention_decode, attention_full,
                                     cross_attention, encode_cross_kv,
-                                    init_attention, init_kv_cache)
+                                    init_attention, init_kv_cache,
+                                    init_paged_kv_cache)
 from repro.models.layers import (embed, init_embedding, init_lm_head,
                                  init_mlp, init_rmsnorm, lm_head, mlp,
                                  rmsnorm, unembed_tied)
@@ -160,6 +161,25 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
     return {"segments": segs}
 
 
+def init_paged_cache(cfg: ArchConfig, n_phys: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Dict:
+    """Paged decode state: every attention layer shares ONE logical
+    block layout (the per-slot block tables in ``serving.paged``), each
+    layer owning its own (n_phys, block_size, ...) pool.  Paging covers
+    KV caches only — recurrent (SSM/hybrid) state and encoder memory
+    have no sequence axis to page, so those archs keep the dense cache
+    (``DecodeEngine`` rejects them in paged mode)."""
+    segs = []
+    for kind, count in make_segments(cfg):
+        if kind != LAYER_ATTN:
+            raise ValueError("paged KV cache supports attention-only "
+                             f"architectures; {cfg.name} has a {kind} segment")
+        c = [init_paged_kv_cache(n_phys, block_size, cfg.attention, dtype)
+             for _ in range(count)]
+        segs.append(_tree_stack(c))
+    return {"segments": segs}
+
+
 # ===========================================================================
 # Layer bodies
 # ===========================================================================
@@ -176,12 +196,14 @@ def _ffn_apply(lp, cfg: ArchConfig, h: Array, routing_override):
 
 def _attn_layer(lp, cfg: ArchConfig, x: Array, positions, cache, cache_len,
                 mode: str, use_kernel: bool, routing_override,
-                memory: Optional[Array], swa_ring: bool = False):
+                memory: Optional[Array], swa_ring: bool = False,
+                block_tables=None):
     h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
     if mode == "decode":
         att, new_cache = attention_decode(lp["attn"], cfg.attention, h, cache,
                                           cache_len, cfg.rope_theta,
-                                          use_kernel, swa_ring)
+                                          use_kernel, swa_ring,
+                                          block_tables=block_tables)
     else:
         att, new_cache = attention_full(lp["attn"], cfg.attention, h,
                                         positions, cfg.rope_theta,
@@ -264,9 +286,14 @@ def encode(params, cfg: ArchConfig, frames: Array) -> Array:
 def forward(params, cfg: ArchConfig, inputs: Dict, *, mode: str = "train",
             cache: Optional[Dict] = None, cache_len=0,
             use_kernel: bool = False, routing_override=None,
-            remat=False, swa_ring: bool = False,
+            remat=False, swa_ring: bool = False, block_tables=None,
             ) -> Tuple[Array, Optional[Dict], Array, Array]:
     """Returns (logits, new_cache, moe_aux_loss, hidden).
+
+    ``block_tables`` (b, max_blocks) i32 switches decode-mode attention
+    onto the PAGED cache path: ``cache`` must then be an
+    ``init_paged_cache`` pool and ``cache_len`` a (b,) per-slot length
+    vector (``serving.paged`` owns the table bookkeeping).
 
     ``hidden`` is the final-norm output (b, s, d) — the representation
     the LM head (and any auxiliary head bank, e.g. MTP) reads.  Serving
@@ -317,7 +344,7 @@ def forward(params, cfg: ArchConfig, inputs: Dict, *, mode: str = "train",
                 lp, lc = inp
                 y, nc, aux = _attn_layer(lp, cfg, x, positions, lc, cache_len,
                                          mode, use_kernel, routing_override,
-                                         memory, swa_ring)
+                                         memory, swa_ring, block_tables)
                 return y, (nc, aux)
         elif kind == LAYER_SSM:
             def body(x, inp, _kind=kind):

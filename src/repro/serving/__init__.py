@@ -7,11 +7,14 @@ from repro.serving.diffusion import DiffusionBlockDecoder, DiffusionSlotAdapter
 from repro.serving.engine import DecodeEngine
 from repro.serving.mtp import (MTPDecoder, MTPSlotAdapter, init_mtp_heads,
                                mtp_loss)
+from repro.serving.paged import (BlockAllocator, BlockManager, PagedKVConfig,
+                                 PrefixCache)
 from repro.serving.scheduler import Request, ServingLoop
 from repro.serving.speculative import (SpeculativeDecoder,
                                        SpeculativeSlotAdapter, ngram_draft)
 
-__all__ = ["DecodeEngine", "DecodeStats", "ParallelDecodeAlgorithm",
+__all__ = ["BlockAllocator", "BlockManager", "DecodeEngine", "DecodeStats",
+           "ParallelDecodeAlgorithm", "PagedKVConfig", "PrefixCache",
            "SlotAdapter", "SpeculativeDecoder", "SpeculativeSlotAdapter",
            "DiffusionBlockDecoder", "DiffusionSlotAdapter", "MTPDecoder",
            "MTPSlotAdapter", "Request", "ServingLoop", "init_mtp_heads",

@@ -19,11 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.arch import ArchConfig
+from repro.core.arch import LAYER_ATTN, ArchConfig
 from repro.core.granularity import GranularitySpec
 from repro.core.hardware import TPU_V5E, HardwareSpec
 from repro.core.nfp import parallelism_budget
-from repro.models.transformer import forward, init_cache
+from repro.models.transformer import (forward, init_cache, init_paged_cache,
+                                      make_segments)
+from repro.serving.paged import BlockManager, PagedKVConfig
 
 Array = jax.Array
 
@@ -46,8 +48,49 @@ def _decode_fn(params, cfg: ArchConfig, tokens, cache, cache_len,
     return logits, cache, hidden
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernel"))
+def _decode_paged_fn(params, cfg: ArchConfig, tokens, cache, slot_lens,
+                     block_tables, use_kernel=False):
+    logits, cache, _, hidden = forward(params, cfg, {"tokens": tokens},
+                                       mode="decode", cache=cache,
+                                       cache_len=slot_lens,
+                                       use_kernel=use_kernel,
+                                       block_tables=block_tables)
+    return logits, cache, hidden
+
+
+@jax.jit
+def _copy_pool_blocks(cache, src, dst):
+    """Copy pool blocks src -> dst across every layer (the COW device
+    op).  Pool leaves are (layers, n_phys, block, ...): index axis 1."""
+    return jax.tree.map(lambda pool: pool.at[:, dst].set(pool[:, src]), cache)
+
+
+@jax.jit
+def _scatter_prefill(cache, scratch, flat_idx, rows, cols):
+    """Move freshly prefilled KV from the dense scratch cache into pool
+    pages: scratch[(row, col)] -> pool_flat[flat_idx], per layer.
+    Padding entries target the trash page (duplicate-index writes there
+    are harmless)."""
+    def one(pool, scr):
+        n_phys, bs = pool.shape[1], pool.shape[2]
+        flat = pool.reshape((pool.shape[0], n_phys * bs) + pool.shape[3:])
+        flat = flat.at[:, flat_idx].set(scr[:, rows, cols])
+        return flat.reshape(pool.shape)
+    return jax.tree.map(one, cache, scratch)
+
+
 @dataclass
 class DecodeEngine:
+    """``paged=PagedKVConfig(...)`` switches the slotted serving mode
+    onto the paged KV cache: ``cache`` becomes a global refcounted block
+    pool (``init_paged_cache``) shared by all slots through the
+    ``BlockManager``'s per-slot block tables, and admissions whose
+    prompt prefix is already resident skip prefill for the shared
+    blocks.  Paged mode serves attention-only archs via the slotted API
+    (``prefill_slots``/``decode_slots``/``commit_slots``); the
+    single-request scalar-``cache_len`` drivers stay dense."""
+
     cfg: ArchConfig
     params: Dict
     batch: int
@@ -56,21 +99,53 @@ class DecodeEngine:
     use_kernel: bool = False
     cache: Optional[Dict] = None
     cache_len: Array = field(default_factory=lambda: jnp.zeros((), jnp.int32))
+    paged: Optional[PagedKVConfig] = None
 
     def __post_init__(self):
-        if self.cache is None:
+        self.manager: Optional[BlockManager] = None
+        if self.paged is not None:
+            if self.cfg.encoder is not None or any(
+                    kind != LAYER_ATTN for kind, _ in make_segments(self.cfg)):
+                raise ValueError(
+                    "paged KV cache requires an attention-only decoder "
+                    f"(no SSM/hybrid segments, no encoder); got {self.cfg.name}")
+            bs = self.paged.block_size
+            n_blocks = (self.paged.n_blocks if self.paged.n_blocks
+                        else self.batch * (self.max_len // max(bs, 1)))
+            self.manager = BlockManager(self.batch, self.max_len, bs,
+                                        n_blocks, self.paged.prefix_cache)
+            if self.cache is None:
+                self.cache = init_paged_cache(self.cfg, self.manager.n_phys,
+                                              bs)
+        elif self.cache is None:
             self.cache = init_cache(self.cfg, self.batch, self.max_len)
         self.gran = GranularitySpec.for_backend(
             self.cfg.ffn.n_experts,
             head_dim=(self.cfg.attention.head_dim if self.cfg.attention
-                      else 128))
+                      else 128),
+            kv_page=(self.paged.block_size if self.paged else 0))
         # per-slot cache lengths for the scheduler's slotted mode; the
         # single-request drivers keep using the scalar ``cache_len``
         self.slot_lens = jnp.zeros((self.batch,), jnp.int32)
+        self._bt_device: Optional[Array] = None
         # (b, d) final-norm hidden of the last prefilled position (MTP
         # proposals read it); one entry per bucketed prefill forward
         self.last_hidden: Optional[Array] = None
         self.prefill_log: List[Dict] = []
+
+    def _require_dense(self, what: str) -> None:
+        if self.manager is not None:
+            raise RuntimeError(
+                f"{what} drives the aligned dense cache; a paged engine "
+                "serves through prefill_slots/decode_slots/commit_slots")
+
+    def _device_tables(self) -> Array:
+        """Device copy of the block tables, cached between admissions —
+        tables only change at admit/COW/release, so re-uploading every
+        decode step would be pure repeated host->device traffic."""
+        if self._bt_device is None:
+            self._bt_device = jnp.asarray(self.manager.device_tables())
+        return self._bt_device
 
     # ------------------------------------------------------------------
     def nfp_budget(self, eps: float = 0.2, routing: str = "balanced",
@@ -89,6 +164,7 @@ class DecodeEngine:
         ``self.last_hidden`` holds the (b, d) final-norm hidden state of
         the last prompt position — the state auxiliary head banks (MTP)
         propose from."""
+        self._require_dense("prefill")
         logits, self.cache, hidden = _prefill_fn(self.params, self.cfg,
                                                  tokens, self.cache,
                                                  self.use_kernel)
@@ -102,6 +178,7 @@ class DecodeEngine:
         positions.  ``advance`` = how many of the N positions to commit to
         the cache (speculative decoding commits only accepted tokens);
         default commits all N."""
+        self._require_dense("decode_step")
         logits, new_cache, _ = _decode_fn(self.params, self.cfg, tokens,
                                           self.cache, self.cache_len,
                                           self.use_kernel)
@@ -115,10 +192,12 @@ class DecodeEngine:
     def peek_step(self, tokens: Array) -> Tuple[Array, Dict, Array]:
         """Decode forward WITHOUT committing (verification forwards).
         Returns (logits, new_cache, hidden)."""
+        self._require_dense("peek_step")
         return _decode_fn(self.params, self.cfg, tokens, self.cache,
                           self.cache_len, self.use_kernel)
 
     def commit(self, new_cache: Dict, n_accepted) -> None:
+        self._require_dense("commit")
         self.cache = new_cache
         self.cache_len = self.cache_len + n_accepted
 
@@ -145,11 +224,10 @@ class DecodeEngine:
         """SSM / hybrid segments carry a recurrent state that would
         absorb the bucket's tail padding — those archs prefill at exact
         prompt lengths (still batched across equal-length prompts)."""
-        from repro.core.arch import LAYER_ATTN
-        from repro.models.transformer import make_segments
         return any(kind != LAYER_ATTN for kind, _ in make_segments(self.cfg))
 
-    def prefill_slots(self, prompts: Dict[int, Array]
+    def prefill_slots(self, prompts: Dict[int, Array],
+                      reserve: Optional[Dict[int, int]] = None
                       ) -> Dict[int, Tuple[Array, Array]]:
         """Bucketed multi-slot batched prefill: fill MANY cache slots in
         one forward.  ``prompts``: {slot: (p,) tokens}.
@@ -162,9 +240,26 @@ class DecodeEngine:
         per-admission recompile storm of prefilling each distinct prompt
         length separately — and one forward admits the whole group.
 
+        On a PAGED engine, ``reserve`` caps each slot's block-table
+        reservation to {slot: prompt + max_tokens + headroom} positions
+        (default: the full ``max_len``), and admissions whose prompt
+        prefix is prefix-cache resident skip the prefill compute for the
+        shared blocks — only the divergent suffix runs, as a per-row
+        offset decode-shape forward (see ``_prefill_slots_paged``).
+
         Returns {slot: (last-prompt-position logits, hidden)}.
         """
         lens = {s: int(jnp.shape(p)[0]) for s, p in prompts.items()}
+        for s, p in lens.items():
+            if p < 1:
+                raise ValueError(f"slot {s}: empty prompt")
+            if p > self.max_len:
+                raise ValueError(
+                    f"slot {s}: prompt of {p} tokens exceeds the engine's "
+                    f"max_len={self.max_len}; it cannot be prefilled "
+                    "(admission should have rejected it)")
+        if self.manager is not None:
+            return self._prefill_slots_paged(prompts, lens, reserve or {})
         groups: List[Tuple[int, List[int]]]
         if self._needs_exact_prefill():
             by_len: Dict[int, List[int]] = {}
@@ -190,7 +285,116 @@ class DecodeEngine:
                 self.slot_lens = self.slot_lens.at[s].set(lens[s])
                 out[s] = (logits[s, lens[s] - 1], hidden[s, lens[s] - 1])
             self.prefill_log.append({"slots": sorted(rows),
-                                     "bucket": width})
+                                     "bucket": width,
+                                     "computed_tokens": sum(
+                                         lens[s] for s in rows)})
+        return out
+
+    def _prefill_slots_paged(self, prompts: Dict[int, Array],
+                             lens: Dict[int, int],
+                             reserve: Dict[int, int]
+                             ) -> Dict[int, Tuple[Array, Array]]:
+        """Paged admission + prefill.
+
+        Per slot: the BlockManager attaches prefix-cache-resident blocks
+        (read-only, refcounted), performs the divergence-block
+        copy-on-write when the reuse boundary falls inside a shared
+        block, and eagerly allocates the rest of the reservation.  Then:
+
+          - NO-HIT slots run the normal bucketed prefill against a dense
+            SCRATCH cache sized to the bucket, and the fresh KV is
+            scattered into their pool pages — the forward itself is
+            byte-identical to the dense engine's.
+          - HIT slots skip the shared prefix entirely: only the
+            divergent suffix runs, as ONE shared decode-shape forward at
+            per-row offsets (= each slot's cached length), writing
+            straight into the pool.  This is where prefix caching turns
+            into saved prefill compute.
+
+        Full prompt blocks register in the prefix cache AFTERWARD (their
+        KV is resident by then), so later admissions can hit them.
+        """
+        mgr = self.manager
+        tok_host = {s: np.asarray(prompts[s], np.int64).ravel()
+                    for s in prompts}
+        plans = {}
+        for s in sorted(prompts):
+            r = min(int(reserve.get(s, self.max_len)), self.max_len)
+            plans[s] = mgr.admit(s, tok_host[s].tolist(),
+                                 max(r, lens[s]))
+        self._bt_device = None                 # tables changed
+        cows = [c for s in sorted(prompts) for c in plans[s].cow_copies]
+        if cows:
+            self.cache = _copy_pool_blocks(
+                self.cache, jnp.asarray([c[0] for c in cows], jnp.int32),
+                jnp.asarray([c[1] for c in cows], jnp.int32))
+        full = sorted(s for s in prompts if plans[s].cached_len == 0)
+        hits = sorted(s for s in prompts if plans[s].cached_len > 0)
+        out: Dict[int, Tuple[Array, Array]] = {}
+        bs = mgr.block_size
+        if full:
+            width = self.prefill_bucket(max(lens[s] for s in full))
+            toks = np.zeros((self.batch, width), np.int32)
+            for s in full:
+                toks[s, :lens[s]] = tok_host[s]
+            scratch = init_cache(self.cfg, self.batch, width)
+            logits, scratch, hidden = _prefill_fn(
+                self.params, self.cfg, jnp.asarray(toks), scratch,
+                self.use_kernel)
+            rows, cols, flats = [], [], []
+            for s in full:
+                pos = np.arange(lens[s])
+                page = mgr.tables[s, pos // bs].astype(np.int64)
+                rows.append(np.full(lens[s], s, np.int64))
+                cols.append(pos)
+                flats.append(page * bs + pos % bs)
+            rows = np.concatenate(rows)
+            cols = np.concatenate(cols)
+            flats = np.concatenate(flats)
+            # pad the scatter to a power-of-two bucket (compile reuse);
+            # pad entries dump into the trash page
+            m = 8
+            while m < len(rows):
+                m *= 2
+            pad = m - len(rows)
+            rows = np.pad(rows, (0, pad))
+            cols = np.pad(cols, (0, pad))
+            flats = np.pad(flats, (0, pad), constant_values=mgr.trash * bs)
+            self.cache = _scatter_prefill(
+                self.cache, scratch, jnp.asarray(flats, jnp.int32),
+                jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32))
+            for s in full:
+                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                out[s] = (logits[s, lens[s] - 1], hidden[s, lens[s] - 1])
+            self.prefill_log.append({"slots": full, "bucket": width,
+                                     "cached_tokens": 0,
+                                     "computed_tokens": sum(
+                                         lens[s] for s in full)})
+        if hits:
+            suf = {s: lens[s] - plans[s].cached_len for s in hits}
+            for s in hits:
+                self.slot_lens = self.slot_lens.at[s].set(
+                    plans[s].cached_len)
+            width = self.prefill_bucket(max(suf.values()))
+            toks = np.zeros((self.batch, width), np.int32)
+            for s in hits:
+                toks[s, :suf[s]] = tok_host[s][plans[s].cached_len:]
+            logits, new_cache, hidden = _decode_paged_fn(
+                self.params, self.cfg, jnp.asarray(toks), self.cache,
+                self.slot_lens, self._device_tables(), self.use_kernel)
+            # suffix KV is committed; rows outside the hit group wrote
+            # past their own committed length (or into the trash page),
+            # which no mask ever reads back
+            self.cache = new_cache
+            for s in hits:
+                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                out[s] = (logits[s, suf[s] - 1], hidden[s, suf[s] - 1])
+            self.prefill_log.append({
+                "slots": hits, "bucket": width,
+                "cached_tokens": sum(plans[s].cached_len for s in hits),
+                "computed_tokens": sum(suf.values())})
+        for s in sorted(prompts):
+            mgr.register_prompt(s, tok_host[s].tolist())
         return out
 
     def prefill_slot(self, slot: int, prompt: Array) -> Array:
@@ -205,7 +409,12 @@ class DecodeEngine:
 
         With ``use_kernel=True`` the per-slot lengths ride the ragged
         Pallas decode-attention kernel's scalar-prefetch lane — one
-        quantized launch for the whole mixed-length batch."""
+        quantized launch for the whole mixed-length batch (on a paged
+        engine, with the block tables as a second prefetch operand)."""
+        if self.manager is not None:
+            return _decode_paged_fn(self.params, self.cfg, tokens,
+                                    self.cache, self.slot_lens,
+                                    self._device_tables(), self.use_kernel)
         return _decode_fn(self.params, self.cfg, tokens, self.cache,
                           self.slot_lens, self.use_kernel)
 
@@ -214,8 +423,19 @@ class DecodeEngine:
         bump their length; rows with 0 are untouched (inactive slots or
         fully-rejected blocks).  The row mask is built from the advances
         ON DEVICE — materializing it on the host would force a device
-        sync every scheduler step."""
+        sync every scheduler step.
+
+        A paged engine adopts the new pool wholesale: the forward's
+        writes only ever touch pages the writing slot exclusively owns
+        (COW guarantees refcount-1 at write time) or the trash page, and
+        rows that advanced 0 only wrote past their committed length —
+        positions every mask skips until a later forward overwrites
+        them.  Per-row selection would therefore change nothing."""
         adv = jnp.asarray(advances, jnp.int32)
+        if self.manager is not None:
+            self.cache = new_cache
+            self.slot_lens = self.slot_lens + adv
+            return
         keep = adv > 0                               # (batch,) on device
         self.cache = jax.tree.map(
             lambda old, new: jnp.where(
@@ -225,6 +445,9 @@ class DecodeEngine:
         self.slot_lens = self.slot_lens + adv
 
     def release_slot(self, slot: int) -> None:
+        if self.manager is not None:
+            self.manager.release(slot)
+            self._bt_device = None             # tables changed
         self.slot_lens = self.slot_lens.at[slot].set(0)
 
     # ------------------------------------------------------------------

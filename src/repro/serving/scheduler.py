@@ -140,13 +140,31 @@ class ServingLoop:
     def submit(self, prompt, max_tokens: int) -> Request:
         prompt = np.asarray(prompt, np.int64).ravel()
         # reject here, where the caller can handle it per-request — an
-        # admission-time failure would abort every in-flight request
+        # admission-time failure would abort every in-flight request.
+        # The prompt-alone check matters: ``prefill_bucket`` clamps its
+        # bucket to max_len, so an oversized prompt used to fail deep in
+        # the prefill machinery (or silently truncate on some paths)
+        # instead of at the API surface.
         headroom = self.adapter.headroom()
+        if len(prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(prompt) > self.engine.max_len:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds the engine's "
+                f"max_len={self.engine.max_len}; it can never be admitted")
         if len(prompt) + int(max_tokens) + headroom > self.engine.max_len:
             raise ValueError(
                 f"request of {len(prompt)} prompt + {max_tokens} tokens "
                 f"(+{headroom} draft headroom) cannot fit "
                 f"max_len={self.engine.max_len}")
+        mgr = self.engine.manager
+        if mgr is not None:
+            worst = -(-min(len(prompt) + int(max_tokens) + headroom,
+                           self.engine.max_len) // mgr.block_size)
+            if worst > mgr.n_blocks:
+                raise ValueError(
+                    f"request needs up to {worst} KV blocks but the pool "
+                    f"only has {mgr.n_blocks}; it can never be admitted")
         req = Request(self._next_rid, prompt, int(max_tokens))
         self._next_rid += 1
         self.waiting.append(req)
@@ -159,11 +177,25 @@ class ServingLoop:
         ell = int(lens.max()) if lens.size else 1
         return self.engine.nfp_budget(self.eps, ell=ell)
 
+    def _reserve_len(self, req: Request) -> int:
+        """Cache positions a request can touch over its lifetime."""
+        return min(len(req.prompt) + req.max_tokens
+                   + self.adapter.headroom(), self.engine.max_len)
+
     def _admit(self) -> None:
         """Admission: fill free slots while every active request still
         fits >= 1 position inside the budget, then prefill ALL newly
-        admitted slots in one bucketed batched forward."""
+        admitted slots in one bucketed batched forward.
+
+        On a paged engine the gate is FREE BLOCKS, not free slots alone:
+        a candidate only admits if the pool can cover its whole
+        reservation (prompt + max_tokens + headroom, minus whatever its
+        prefix-cache hit reuses) — evictable cache-only blocks count as
+        available.  Requests that don't fit yet simply wait; retirement
+        and LRU eviction free blocks over time."""
         admitted: Dict[int, Request] = {}
+        mgr = self.engine.manager
+        blocks_left = mgr.available_blocks() if mgr is not None else 0
         ell = int(np.asarray(self.engine.slot_lens).max())
         while self.waiting and self.free_slots:
             # prospective budget once the head-of-queue prompt lands
@@ -172,6 +204,14 @@ class ServingLoop:
             budget = self.engine.nfp_budget(self.eps, ell=ell_next)
             if len(self.active) + len(admitted) >= max(1, budget):
                 break
+            if mgr is not None:
+                # budget new blocks AND the evictable cached blocks this
+                # admission would pin (they stop being reclaimable)
+                need, pinned = mgr.admission_cost(cand.prompt.tolist(),
+                                                  self._reserve_len(cand))
+                if need + pinned > blocks_left:
+                    break
+                blocks_left -= need + pinned
             req = self.waiting.popleft()
             slot = self.free_slots.pop(0)
             req.slot = slot
@@ -180,7 +220,8 @@ class ServingLoop:
         if not admitted:
             return
         outs = self.engine.prefill_slots(
-            {s: r.prompt for s, r in admitted.items()})
+            {s: r.prompt for s, r in admitted.items()},
+            reserve={s: self._reserve_len(r) for s, r in admitted.items()})
         for slot, req in admitted.items():
             logits, hidden = outs[slot]
             req.pending = int(jnp.argmax(logits))
@@ -202,11 +243,16 @@ class ServingLoop:
             return None
         active = np.zeros(self.engine.batch, bool)
         active[list(self.active)] = True
+        extra = {}
+        if self.engine.manager is not None:
+            # the paged launch tiles kv by PAGE: its k_block is the kv
+            # block size, so executed/grid tiles stay honest under paging
+            extra["k_block"] = self.engine.manager.block_size
         return slack_report(
             width, np.asarray(self.engine.slot_lens), self.engine.max_len,
             head_dim=a.head_dim,
             window=a.window if a.kind == "swa" else None,
-            active=active)
+            active=active, **extra)
 
     def shared_forward(self, tokens: np.ndarray, budget: int
                        ) -> Tuple[Array, Dict, Array]:
@@ -218,6 +264,8 @@ class ServingLoop:
             "active": len(self.active), "width": width,
             "positions": len(self.active) * width, "budget": budget,
         }
+        if self.engine.manager is not None:
+            entry["kv_blocks_used"] = self.engine.manager.blocks_used()
         slack = self._attn_slack(width)
         if slack is not None:
             entry.update({
@@ -280,6 +328,15 @@ class ServingLoop:
         prefills = self.engine.prefill_log[self._prefill_log_start:]
         out["prefill_forwards"] = len(prefills)
         out["prefill_buckets"] = sorted({e["bucket"] for e in prefills})
+        out["prefill_positions_computed"] = sum(
+            e.get("computed_tokens", 0) for e in prefills)
+        if self.engine.manager is not None:
+            # paged-cache accounting: pool occupancy plus the prefix-hit
+            # counters — ``prefill_positions_saved`` is the prompt
+            # positions admissions did NOT have to prefill
+            out.update(self.engine.manager.stats())
+            out["prefill_positions_saved"] = sum(
+                e.get("cached_tokens", 0) for e in prefills)
         slacked = [e for e in self.step_log if "kv_tile_util" in e]
         if slacked:
             out["mean_attn_row_util"] = (

@@ -1,0 +1,103 @@
+"""Smoke-run every documented command so the docs cannot rot.
+
+Extracts all ```bash fenced blocks from README.md and docs/*.md, scales
+the obviously-expensive knobs down to --tiny proportions (token/step/
+request counts), and runs each ``PYTHONPATH=src python -m ...`` command
+as a subprocess, asserting exit code 0.  Meta commands (pip install,
+the pytest lanes themselves) are skipped, but their presence is still
+asserted to follow the documented shape — any bash block this test
+does not recognize FAILS, which forces new documentation to stay
+runnable.
+
+Slow-marked: the dedicated `docs` CI job (and the nightly full lane)
+runs this file explicitly.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import shlex
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+# documented values -> smoke-scale values (docs keep realistic numbers,
+# CI runs tiny ones)
+SCALE = {
+    "--tokens": 6,
+    "--steps": 2,
+    "--requests": 3,
+    "--slots": 2,
+    "--prompt-len": 5,
+}
+SKIP_PATTERNS = (
+    re.compile(r"^pip install"),          # environment setup
+    re.compile(r"-m pytest\b"),           # the test lanes themselves
+)
+
+
+def _bash_blocks(text: str):
+    return re.findall(r"```bash\n(.*?)```", text, re.S)
+
+
+def _commands():
+    cmds = []
+    for path in DOC_FILES:
+        for block in _bash_blocks(path.read_text()):
+            for line in block.replace("\\\n", " ").splitlines():
+                line = line.split("  #")[0].strip()
+                if line:
+                    cmds.append(pytest.param(
+                        path.name, line,
+                        id=f"{path.name}:{line[:70]}"))
+    return cmds
+
+
+def _scaled(cmd: str) -> str:
+    for flag, val in SCALE.items():
+        cmd = re.sub(rf"(?<=\s){re.escape(flag)} (\d+)",
+                     lambda m, v=val: f"{flag} {min(int(m.group(1)), v)}",
+                     cmd)
+    return cmd
+
+
+def test_docs_have_snippets():
+    """The extraction itself must keep finding the documented commands
+    (a regression here means the docs layout broke the smoke tests)."""
+    cmds = [p.values[1] for p in _commands()]
+    assert sum("repro.launch.serve" in c for c in cmds) >= 3
+    assert any("repro.launch.train" in c for c in cmds)
+    assert any("benchmarks." in c for c in cmds)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(("source", "cmd"), _commands())
+def test_doc_snippet_runs(source, cmd):
+    if any(p.search(cmd) for p in SKIP_PATTERNS):
+        pytest.skip("meta command (install / test lane), not smoke-run")
+    assert cmd.startswith("PYTHONPATH=src python -m "), (
+        f"{source}: bash snippets must be PYTHONPATH=src python -m "
+        f"one-liners so this smoke test can run them; got: {cmd!r}")
+    argv = shlex.split(_scaled(cmd))
+    env = os.environ.copy()
+    assignments = {}
+    while argv and "=" in argv[0] and not argv[0].startswith("-"):
+        k, v = argv.pop(0).split("=", 1)
+        assignments[k] = v
+    src = str(ROOT / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    env.update({k: (v if k != "PYTHONPATH" else env["PYTHONPATH"])
+                for k, v in assignments.items()})
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    assert argv[0] == "python"
+    proc = subprocess.run([sys.executable, *argv[1:]], cwd=ROOT, env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, (
+        f"documented command failed ({source}): {cmd}\n"
+        f"--- stdout ---\n{proc.stdout[-2000:]}\n"
+        f"--- stderr ---\n{proc.stderr[-2000:]}")
