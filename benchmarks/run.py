@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   roofline      — brief deliverable (g), from dry-run artifacts
   cpu_wallclock — real-silicon sanity sweeps
   serving_throughput — scheduler tokens/s vs concurrency (NFP budget)
+  calibration   — empirical NFP calibration + budget-controlled serving
 """
 from __future__ import annotations
 
@@ -19,9 +20,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (attention, cpu_wallclock, dense_ffn, lookup,
-                            model_nfp, moe_ffn, roofline, sensitivity,
-                            serving_throughput)
+    from benchmarks import (attention, calibration, cpu_wallclock,
+                            dense_ffn, lookup, model_nfp, moe_ffn,
+                            roofline, sensitivity, serving_throughput)
     print("name,us_per_call,derived")
     sections = [
         ("dense_ffn", dense_ffn.run),
@@ -33,6 +34,7 @@ def main() -> None:
         ("roofline", roofline.run),
         ("cpu_wallclock", cpu_wallclock.run),
         ("serving_throughput", serving_throughput.run),
+        ("calibration", calibration.run),
     ]
     failed = []
     for name, fn in sections:

@@ -1,0 +1,27 @@
+"""repro.autotune — empirical NFP calibration + online budget control.
+
+Closes the loop the analytic predictor leaves open: ``calibrate``
+measures the practical near-free boundary on the live engine (roofline
+simulator fallback on CPU hosts), ``store`` persists the result as a
+spec-keyed artifact, and ``controller`` adapts the serving loop's
+position budget online against observed step latency.
+
+  calibrate:  calibrate_engine / calibrate_specs -> CalibrationTable
+  store:      save_table / load_table / spec_fingerprint (stale-key
+              refusal via CalibrationMismatchError)
+  controller: BudgetController (AIMD, variance-gated, per-context-
+              bucket) — plug into ServingLoop(controller=...)
+"""
+from repro.autotune.calibrate import (DEFAULT_MODES, calibrate_engine,
+                                      calibrate_specs, context_buckets,
+                                      simulator_time_fn, width_grid)
+from repro.autotune.controller import BudgetController, ControllerConfig
+from repro.autotune.store import (CalibrationEntry, CalibrationMismatchError,
+                                  CalibrationTable, load_table, save_table,
+                                  spec_fingerprint)
+
+__all__ = ["DEFAULT_MODES", "BudgetController", "CalibrationEntry",
+           "CalibrationMismatchError", "CalibrationTable",
+           "ControllerConfig", "calibrate_engine", "calibrate_specs",
+           "context_buckets", "load_table", "save_table",
+           "simulator_time_fn", "spec_fingerprint", "width_grid"]

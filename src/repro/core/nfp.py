@@ -230,7 +230,15 @@ def parallelism_budget(cfg: ArchConfig, hw: HardwareSpec,
                        eps: float = 0.2,
                        routing: str = "balanced") -> int:
     """The near-free position budget an algorithm (speculative verification
-    length, MTP length, diffusion block size) should not exceed."""
+    length, MTP length, diffusion block size) should not exceed.
+
+    The fractional model boundary is FLOORED, never rounded: the budget
+    is a promise that every position inside it is near-free, so a
+    boundary of e.g. 34.4 must yield 34 — rounding up would schedule
+    one position past the knee on every step.  ``int()`` happens to
+    truncate positive floats the same way, but the budget contract is
+    about flooring, so say it explicitly.
+    """
     pred = predict_model(cfg, hw, gran, b, ell, routing=routing)
     n = pred.n_max
-    return max(1, int(n)) if math.isfinite(n) else cfg.max_seq_len
+    return max(1, math.floor(n)) if math.isfinite(n) else cfg.max_seq_len

@@ -22,6 +22,8 @@ import time
 import jax
 import numpy as np
 
+from repro.autotune import (BudgetController, calibrate_engine, load_table,
+                            save_table, spec_fingerprint)
 from repro.checkpoint import latest_step, restore
 from repro.configs import get_config
 from repro.core import get_hardware
@@ -59,6 +61,31 @@ def _single_request(args, cfg, params) -> None:
     print("tokens:", out[:32], "...")
 
 
+def _calibration_controller(args, eng):
+    """--calibration {run,load}: produce/load the calibration artifact
+    and wrap it in a BudgetController for the serving loop."""
+    key = spec_fingerprint(eng.cfg, eng.hardware, eng.gran,
+                           (eng.use_kernel,), eng.batch, eps=0.2)
+    if args.calibration == "run":
+        table = calibrate_engine(eng, modes=(args.serve_mode,))
+        save_table(table, args.calibration_path)
+        print(f"calibration: swept {len(table.buckets())} context buckets "
+              f"via {table.backend} backend -> {args.calibration_path} "
+              f"(key {table.key})")
+    else:
+        table = load_table(args.calibration_path, expect_key=key)
+        print(f"calibration: loaded {args.calibration_path} "
+              f"({table.backend} backend, key {table.key})")
+    for e in sorted(table.entries, key=lambda e: e.ell):
+        if e.mode == args.serve_mode and e.use_kernel == eng.use_kernel:
+            print(f"  L<={e.ell}: analytic={e.analytic_nmax} "
+                  f"measured={e.measured_nmax} "
+                  f"calibrated={e.calibrated_budget} "
+                  f"over-prediction={e.overprediction:.2f}x "
+                  f"(limit={e.limiting})")
+    return BudgetController(table=table)
+
+
 def _multi_request(args, cfg, params) -> None:
     paged = None
     if args.kv_block_size > 0:
@@ -71,7 +98,11 @@ def _multi_request(args, cfg, params) -> None:
     if args.serve_mode == "mtp":
         kwargs["mtp_heads"] = init_mtp_heads(
             jax.random.PRNGKey(5), cfg.d_model, cfg.vocab_size, n_heads=4)
-    loop = ServingLoop(eng, mode=args.serve_mode, **kwargs)
+    controller = None
+    if args.calibration != "off":
+        controller = _calibration_controller(args, eng)
+    loop = ServingLoop(eng, mode=args.serve_mode, controller=controller,
+                       **kwargs)
     for i in range(args.requests):
         prompt = jax.random.randint(jax.random.PRNGKey(100 + i),
                                     (args.prompt_len,), 0, cfg.vocab_size)
@@ -91,6 +122,18 @@ def _multi_request(args, cfg, params) -> None:
           f"{s['tokens_per_forward']:.2f} tok/fwd, "
           f"max {s['max_positions_per_forward']} positions/fwd)")
     print(f"throughput: {s['tokens'] / max(dt, 1e-9):.1f} tok/s")
+    if controller is not None:
+        cs = s["controller"]
+        line = (f"budget control: analytic~{s['mean_budget_analytic']:.1f} "
+                f"applied~{s['mean_budget']:.1f}")
+        if "mean_budget_calibrated" in s:
+            line += f" calibrated~{s['mean_budget_calibrated']:.1f}"
+        if "max_latency_ratio" in s:
+            line += (f"  latency ratio mean={s['mean_latency_ratio']:.2f} "
+                     f"max={s['max_latency_ratio']:.2f}")
+        line += (f"  (shrinks={cs['shrinks']} probes={cs['probes']} "
+                 f"gated={cs['gated']})")
+        print(line)
     if paged is not None:
         print(f"paged kv: block_size={s['kv_block_size']} "
               f"blocks={s['kv_blocks']} peak_used={s['kv_blocks_peak']}  "
@@ -130,12 +173,25 @@ def main() -> None:
     ap.add_argument("--kv-blocks", type=int, default=0,
                     help="paged KV pool size in blocks (0 = dense-"
                          "parity default: slots * max_len / block)")
+    ap.add_argument("--calibration", default="off",
+                    choices=["off", "load", "run"],
+                    help="empirical NFP calibration for the scheduler: "
+                         "'run' sweeps T(N) on the engine (roofline-"
+                         "simulator fallback without an accelerator), "
+                         "saves the artifact, and serves with the "
+                         "BudgetController; 'load' serves with a saved "
+                         "artifact (refusing a stale spec hash)")
+    ap.add_argument("--calibration-path", default="nfp_calibration.json",
+                    help="calibration artifact path for --calibration")
     args = ap.parse_args()
     if args.kv_block_size > 0 and args.requests <= 0:
         ap.error("--kv-block-size serves the multi-request scheduler; "
                  "add --requests N")
     if args.kv_blocks > 0 and args.kv_block_size <= 0:
         ap.error("--kv-blocks sizes the paged pool; add --kv-block-size")
+    if args.calibration != "off" and args.requests <= 0:
+        ap.error("--calibration tunes the multi-request scheduler; "
+                 "add --requests N")
 
     cfg = get_config(args.arch, reduced=args.tiny)
     params = init_model(jax.random.PRNGKey(0), cfg)

@@ -41,9 +41,10 @@ identical to the solo ``DiffusionBlockDecoder`` at the same block size.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,6 +94,17 @@ class ServingLoop:
     plugged in directly via ``adapter=`` (it receives this loop).
     ``mtp_heads`` feeds the mtp adapter; ``block_size`` /
     ``refine_steps`` / ``mask_id`` feed the diffusion adapter.
+
+    ``controller`` (an ``autotune.BudgetController``) replaces the raw
+    analytic ``engine.nfp_budget`` as the per-step position budget: the
+    analytic value stays the hard cap, but the controller shrinks and
+    probes inside it against the step latency the loop actually
+    observes (admission keeps the analytic gate — concurrency is a
+    throughput decision, the controller governs per-forward width).
+    ``step_clock(width, ell) -> seconds`` substitutes a latency model
+    for the wall clock (one call per forward of that step) — the
+    calibration benchmark injects the roofline simulator here, since a
+    CPU host cannot time the TPU-target forward it is scheduling.
     """
 
     MODES = ("greedy", "speculative", "diffusion", "mtp")
@@ -102,10 +114,14 @@ class ServingLoop:
                  adapter: Optional[SlotAdapter] = None,
                  mtp_heads: Optional[Dict] = None,
                  block_size: Optional[int] = None, refine_steps: int = 4,
-                 mask_id: Optional[int] = None):
+                 mask_id: Optional[int] = None,
+                 controller=None,
+                 step_clock: Optional[Callable[[int, int], float]] = None):
         self.engine = engine
         self.eps = eps
         self.max_width = max_width
+        self.controller = controller
+        self.step_clock = step_clock
         if adapter is None:
             if mode not in self.MODES:
                 raise ValueError(f"unknown serving mode {mode!r}")
@@ -121,6 +137,12 @@ class ServingLoop:
                     mask_id=mask_id)
         self.adapter = adapter
         self.mode = adapter.mode
+        if controller is not None:
+            controller.bind(self.mode, engine.use_kernel,
+                            clocked=step_clock is not None)
+        # budget provenance of the CURRENT step (set by ``budget()``,
+        # read by ``shared_forward`` telemetry and ``step`` timing)
+        self._budget_info: Dict = {}
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}            # slot -> request
         self.free_slots: List[int] = list(range(engine.batch))
@@ -172,10 +194,23 @@ class ServingLoop:
 
     # ------------------------------------------------------------------
     def budget(self) -> int:
-        """NFP budget at the CURRENT longest active context."""
+        """Position budget at the CURRENT longest active context:
+        the analytic NFP budget, refined by the ``BudgetController``
+        when one is attached (predicted / calibrated / applied
+        provenance lands in each forward's ``step_log`` entry)."""
         lens = np.asarray(self.engine.slot_lens)
-        ell = int(lens.max()) if lens.size else 1
-        return self.engine.nfp_budget(self.eps, ell=ell)
+        ell = max(int(lens.max()) if lens.size else 1, 1)
+        analytic = self.engine.nfp_budget(self.eps, ell=ell)
+        info = {"ell": ell, "analytic": analytic, "applied": analytic}
+        if self.controller is not None:
+            info["applied"] = self.controller.budget(
+                ell, len(self.active), analytic)
+            calibrated = self.controller.table_budget(
+                ell, len(self.active), analytic)
+            if calibrated is not None:
+                info["calibrated"] = calibrated
+        self._budget_info = info
+        return info["applied"]
 
     def _reserve_len(self, req: Request) -> int:
         """Cache positions a request can touch over its lifetime."""
@@ -263,7 +298,11 @@ class ServingLoop:
         entry = {
             "active": len(self.active), "width": width,
             "positions": len(self.active) * width, "budget": budget,
+            "budget_analytic": self._budget_info.get("analytic", budget),
+            "ell": self._budget_info.get("ell", 1),
         }
+        if "calibrated" in self._budget_info:
+            entry["budget_calibrated"] = self._budget_info["calibrated"]
         if self.engine.manager is not None:
             entry["kv_blocks_used"] = self.engine.manager.blocks_used()
         slack = self._attn_slack(width)
@@ -290,7 +329,26 @@ class ServingLoop:
         budget = self.budget()
         slots = sorted(self.active)
         width = self.adapter.width(len(slots), budget)
+        mark = len(self.step_log)
+        t0 = time.perf_counter()
         self.adapter.run_step(slots, width, budget)
+        # --- step latency + controller feedback ------------------------
+        # run_step host-syncs on its accept loop, so the wall clock is a
+        # faithful per-step latency on a real accelerator; step_clock
+        # substitutes a latency model per forward (benchmarks on CPU).
+        dt = time.perf_counter() - t0
+        new = self.step_log[mark:]
+        if new:
+            if self.step_clock is not None:
+                ell = self._budget_info.get("ell", 1)
+                dt = sum(self.step_clock(e["width"], ell) for e in new)
+            new[-1]["step_latency_s"] = dt
+            if self.controller is not None:
+                ratio = self.controller.observe(
+                    self._budget_info.get("ell", 1),
+                    max(e["width"] for e in new), dt / len(new))
+                if ratio is not None:
+                    new[-1]["latency_ratio"] = ratio
         # --- retire ----------------------------------------------------
         for s in slots:
             req = self.active[s]
@@ -337,6 +395,31 @@ class ServingLoop:
             out.update(self.engine.manager.stats())
             out["prefill_positions_saved"] = sum(
                 e.get("cached_tokens", 0) for e in prefills)
+        # budget provenance: what the analytic predictor said, what the
+        # calibration table said, what was actually spent — plus the
+        # controller's observed-latency accounting when one is attached
+        if self.step_log:
+            out["mean_budget"] = (sum(e["budget"] for e in self.step_log)
+                                  / len(self.step_log))
+            out["mean_budget_analytic"] = (
+                sum(e.get("budget_analytic", e["budget"])
+                    for e in self.step_log) / len(self.step_log))
+            calibrated = [e["budget_calibrated"] for e in self.step_log
+                          if "budget_calibrated" in e]
+            if calibrated:
+                out["mean_budget_calibrated"] = (sum(calibrated)
+                                                 / len(calibrated))
+        latencies = [e["step_latency_s"] for e in self.step_log
+                     if "step_latency_s" in e]
+        if latencies:
+            out["step_latency_total_s"] = sum(latencies)
+        ratios = [e["latency_ratio"] for e in self.step_log
+                  if "latency_ratio" in e]
+        if ratios:
+            out["mean_latency_ratio"] = sum(ratios) / len(ratios)
+            out["max_latency_ratio"] = max(ratios)
+        if self.controller is not None:
+            out["controller"] = self.controller.stats()
         slacked = [e for e in self.step_log if "kv_tile_util" in e]
         if slacked:
             out["mean_attn_row_util"] = (

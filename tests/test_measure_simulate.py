@@ -122,6 +122,42 @@ class TestSimulatedNFP:
         assert t_attn_long > 10 * t_attn_short
 
 
+class TestMeasureProtocol:
+    def test_extract_nmax_missing_baseline_clear_error(self):
+        """A curve that never sampled its baseline must fail loudly, not
+        with list.index's opaque ValueError."""
+        curve = LatencyCurve([2, 4, 8], [1.0, 1.0, 1.0], baseline_n=1)
+        with pytest.raises(ValueError, match="baseline_n=1 was not sampled"):
+            extract_nmax(curve, 0.2)
+
+    def test_contiguous_mode_stops_at_first_violation(self):
+        """A noisy rebound past the knee cannot inflate N_max in
+        contiguous mode (the calibrator's setting)."""
+        curve = LatencyCurve([1, 2, 3, 4], [1.0, 1.5, 1.05, 2.0])
+        assert extract_nmax(curve, 0.2) == 3            # rebound wins
+        assert extract_nmax(curve, 0.2, contiguous=True) == 1
+
+    def test_contiguous_equals_default_on_monotone_curves(self):
+        curve = LatencyCurve(list(range(1, 9)),
+                             [1.0, 1.0, 1.1, 1.15, 1.3, 1.5, 2.0, 3.0])
+        assert (extract_nmax(curve, 0.2)
+                == extract_nmax(curve, 0.2, contiguous=True) == 4)
+
+    def test_time_callable_returns_median_and_spread(self):
+        from repro.core import time_callable
+        med, spread = time_callable(lambda: sum(range(200)),
+                                    warmup=1, rounds=3, iters=3)
+        assert med > 0.0
+        assert spread >= 0.0
+
+    def test_sweep_callable_carries_spreads(self):
+        from repro.core import sweep_callable
+        curve = sweep_callable(lambda n: (lambda: sum(range(n))),
+                               [1, 2, 4], warmup=0, rounds=2, iters=2)
+        assert len(curve.spreads) == len(curve.ns) == 3
+        assert curve.max_spread >= 0.0
+
+
 @given(n=st.integers(1, 256), b=st.integers(1, 8))
 @settings(max_examples=30, deadline=None)
 def test_costs_are_positive_and_monotone_in_n(n, b):
