@@ -1,0 +1,29 @@
+"""Hot-path static analysis for the serving stack.
+
+Four checkers, one CLI (``python -m repro.analysis``):
+
+  host-sync          blocking device->host transfers reachable from the
+                     serving loop's decode hot path
+  recompile-hazard   jit call sites fed shape-derived Python scalars,
+                     jits constructed per call, dynamic shapes that
+                     bypass the power-of-two prefill bucketing
+  pallas-contract    BlockSpec index maps statically evaluated over the
+                     launch grid for in-bounds access, divisibility and
+                     scalar-prefetch arity
+  granularity-drift  tile sizes ``core.granularity`` declares (consumed
+                     by the Eq. 12-14 predictor) vs the block shapes the
+                     kernels actually launch with, pinned by a committed
+                     contract
+
+Findings diff against ``analysis-baseline.json`` so existing debt is
+suppressed while NEW findings fail CI (``--check-baseline``).  See
+``docs/analysis.md``.
+"""
+from repro.analysis.baseline import (diff_against_baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.callgraph import Project
+from repro.analysis.cli import run_checkers
+from repro.analysis.findings import Finding
+
+__all__ = ["Finding", "Project", "run_checkers", "load_baseline",
+           "write_baseline", "diff_against_baseline"]

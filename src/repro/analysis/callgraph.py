@@ -1,0 +1,440 @@
+"""AST project index, call-graph reachability, and device-value taint.
+
+Everything downstream (host-sync, recompile-hazard) runs off ONE pass
+over the source tree — no imports of the analyzed code, so the analyzer
+can inspect trees that would not even import (test fixtures, broken
+branches).
+
+Resolution is deliberately an OVER-approximation: an attribute call
+``x.step()`` resolves to EVERY project function named ``step`` (with a
+same-class fast path for ``self.method()``).  For a hot-path linter the
+cost of over-reach is a too-wide hot set, which the baseline absorbs;
+the cost of under-reach would be silent misses.
+
+Device taint answers "does this expression hold a device array?":
+
+  sources   calls into ``jax.*`` / ``jnp.*`` (minus host-safe metadata
+            accessors), calls to project functions that return device
+            values (a fixpoint seeded with every jitted function),
+            parameters annotated ``Array``/``jax.Array``, attributes
+            assigned device values ANYWHERE in the project (attribute
+            taint is name-global — ``self.cache`` is device no matter
+            which class you read it from).
+  not       ``.shape`` / ``.ndim`` / ``.dtype`` metadata, ``jnp.shape``,
+            ``numpy.*`` results (an ``np.asarray(device)`` SYNC is the
+            sink itself; its result lives on the host).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# attribute reads that return host metadata, never a device array
+HOST_META_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding"}
+# jax-namespace calls that return host values (shape tuples, ints, ...)
+HOST_SAFE_CALLS = {
+    "jax.numpy.shape", "jax.numpy.ndim", "jax.numpy.size",
+    "jax.numpy.result_type", "jax.eval_shape", "jax.default_backend",
+    "jax.local_device_count", "jax.device_count", "jax.tree.structure",
+    "jax.tree_util.tree_structure",
+}
+# array-method calls whose RESULT is host-side (they are sync sinks,
+# flagged separately by the host-sync checker)
+HOST_RESULT_METHODS = {"item", "tolist"}
+DEVICE_PARAM_ANNOTATIONS = {"Array", "jax.Array", "jnp.ndarray",
+                            "jax.numpy.ndarray"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Flatten ``a.b.c`` attribute chains rooted at a Name; else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+@dataclass
+class FunctionInfo:
+    qualname: str                    # pkg.mod.Class.fn | pkg.mod.fn
+    name: str
+    module: str                      # pkg.mod
+    cls: Optional[str]               # bare class name, if a method
+    node: ast.AST                    # FunctionDef / AsyncFunctionDef
+    path: Path
+    is_jitted: bool = False
+    static_argnames: Tuple[str, ...] = ()
+    params: Tuple[str, ...] = ()     # positional params, "self" stripped
+    calls: Set[str] = field(default_factory=set)   # resolved qualnames
+
+
+@dataclass
+class ModuleInfo:
+    name: str
+    path: Path
+    tree: ast.Module
+    source: str
+    imports: Dict[str, str] = field(default_factory=dict)  # alias -> dotted
+
+
+def _jit_info(deco: ast.AST) -> Optional[Tuple[Tuple[str, ...]]]:
+    """(static_argnames,) when ``deco`` is jax.jit or
+    functools.partial(jax.jit, static_argnames=...); else None."""
+    d = dotted_name(deco)
+    if d in ("jax.jit", "jit"):
+        return ((),)
+    if isinstance(deco, ast.Call):
+        fn = dotted_name(deco.func)
+        if fn in ("jax.jit", "jit"):
+            return (_static_argnames(deco),)
+        if fn in ("functools.partial", "partial") and deco.args:
+            inner = dotted_name(deco.args[0])
+            if inner in ("jax.jit", "jit"):
+                return (_static_argnames(deco),)
+    return None
+
+
+def _static_argnames(call: ast.Call) -> Tuple[str, ...]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant))
+    return ()
+
+
+class Project:
+    """Parsed index of every module under one source directory."""
+
+    def __init__(self, src_dir: Path, rel_to: Optional[Path] = None):
+        self.src_dir = Path(src_dir)
+        self.rel_to = Path(rel_to) if rel_to else self.src_dir.parent
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_name: Dict[str, List[str]] = {}
+        self.classes: Dict[str, str] = {}       # bare class name -> qualname
+        self.class_methods: Dict[str, Set[str]] = {}  # cls qual -> bare names
+        self.device_attrs: Set[str] = set()
+        self.returns_device: Set[str] = set()
+        self._parse()
+        self._index()
+        self._resolve_calls()
+        self._device_fixpoint()
+
+    # ------------------------------------------------------------------
+    def _parse(self) -> None:
+        for p in sorted(self.src_dir.rglob("*.py")):
+            rel = p.relative_to(self.src_dir)
+            parts = list(rel.parts[:-1])
+            stem = rel.parts[-1][:-3]
+            if stem != "__init__":
+                parts.append(stem)
+            mod = ".".join(parts) if parts else stem
+            try:
+                src = p.read_text()
+                tree = ast.parse(src)
+            except (SyntaxError, UnicodeDecodeError):
+                continue
+            info = ModuleInfo(mod, p, tree, src)
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        info.imports[a.asname or a.name.split(".")[0]] = \
+                            a.name if a.asname else a.name.split(".")[0]
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    for a in node.names:
+                        info.imports[a.asname or a.name] = \
+                            f"{node.module}.{a.name}"
+            self.modules[mod] = info
+
+    def _index(self) -> None:
+        for mod, info in self.modules.items():
+            for node in info.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._add_function(info, node, cls=None)
+                elif isinstance(node, ast.ClassDef):
+                    cq = f"{mod}.{node.name}"
+                    self.classes.setdefault(node.name, cq)
+                    names = self.class_methods.setdefault(cq, set())
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            self._add_function(info, sub, cls=node.name)
+                            names.add(sub.name)
+
+    def _add_function(self, info: ModuleInfo, node, cls: Optional[str]):
+        qual = (f"{info.name}.{cls}.{node.name}" if cls
+                else f"{info.name}.{node.name}")
+        params = tuple(a.arg for a in node.args.posonlyargs + node.args.args
+                       if a.arg not in ("self", "cls"))
+        fi = FunctionInfo(qual, node.name, info.name, cls, node, info.path,
+                          params=params)
+        for deco in node.decorator_list:
+            ji = _jit_info(deco)
+            if ji is not None:
+                fi.is_jitted = True
+                fi.static_argnames = ji[0]
+        self.functions[qual] = fi
+        self.by_name.setdefault(node.name, []).append(qual)
+
+    # ------------------------------------------------------------------
+    def resolve_call(self, fi: FunctionInfo, call: ast.Call) -> Set[str]:
+        """Project qualnames a call MAY dispatch to (over-approximate)."""
+        out: Set[str] = set()
+        func = call.func
+        info = self.modules[fi.module]
+        if isinstance(func, ast.Name):
+            target = info.imports.get(func.id, f"{fi.module}.{func.id}")
+            if target in self.functions:
+                out.add(target)
+            # class instantiation -> its init hooks
+            cq = (target if target in self.class_methods
+                  else self.classes.get(func.id))
+            if cq:
+                for init in ("__init__", "__post_init__"):
+                    q = f"{cq}.{init}"
+                    if q in self.functions:
+                        out.add(q)
+        elif isinstance(func, ast.Attribute):
+            d = dotted_name(func)
+            if d:
+                root, _, rest = d.partition(".")
+                full = f"{info.imports.get(root, root)}.{rest}" if rest else d
+                if full in self.functions:
+                    out.add(full)
+            if not out:
+                # self.method(): same-class resolution first
+                if (isinstance(func.value, ast.Name)
+                        and func.value.id == "self" and fi.cls):
+                    cq = f"{fi.module}.{fi.cls}"
+                    if func.attr in self.class_methods.get(cq, set()):
+                        out.add(f"{cq}.{func.attr}")
+                        return out
+                out.update(self.by_name.get(func.attr, ()))
+        return out
+
+    def _resolve_calls(self) -> None:
+        for fi in self.functions.values():
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call):
+                    fi.calls |= self.resolve_call(fi, node)
+
+    def reachable(self, roots: Iterable[str]) -> Set[str]:
+        seen: Set[str] = set()
+        frontier = [r for r in roots if r in self.functions]
+        while frontier:
+            q = frontier.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            frontier.extend(self.functions[q].calls - seen)
+        return seen
+
+    # ------------------------------------------------------------------
+    # device taint
+    # ------------------------------------------------------------------
+    def _device_fixpoint(self) -> None:
+        """Iterate attribute taint and returns-device to a fixed point
+        (attribute assignments and returns feed each other)."""
+        self.returns_device = {q for q, f in self.functions.items()
+                               if f.is_jitted}
+        for _ in range(6):
+            attrs = self._collect_device_attrs()
+            rets = set(self.returns_device)
+            for q, fi in self.functions.items():
+                if q in rets:
+                    continue
+                taint = DeviceTaint(self, fi)
+                env = taint.build_env()
+                for node in _walk_own(fi.node):
+                    if isinstance(node, ast.Return) and node.value is not None:
+                        if taint.is_device(node.value, env):
+                            rets.add(q)
+                            break
+            if attrs == self.device_attrs and rets == self.returns_device:
+                break
+            self.device_attrs = attrs
+            self.returns_device = rets
+
+    def _collect_device_attrs(self) -> Set[str]:
+        attrs: Set[str] = set()
+        for fi in self.functions.values():
+            taint = DeviceTaint(self, fi)
+            env = taint.build_env()
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    value = node.value
+                    if value is None:
+                        continue
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    if taint.is_device(value, env):
+                        for t in targets:
+                            if isinstance(t, ast.Attribute):
+                                attrs.add(t.attr)
+        # dataclass field annotations: ``x: Array = ...`` in class bodies
+        for info in self.modules.values():
+            for node in ast.walk(info.tree):
+                if isinstance(node, ast.ClassDef):
+                    for sub in node.body:
+                        if (isinstance(sub, ast.AnnAssign)
+                                and isinstance(sub.target, ast.Name)):
+                            ann = dotted_name(sub.annotation) or ""
+                            if ann in DEVICE_PARAM_ANNOTATIONS:
+                                attrs.add(sub.target.id)
+        return attrs
+
+    def canonical(self, fi: FunctionInfo, dotted: str) -> str:
+        """Resolve the first segment of a dotted path through the
+        module's import aliases: ``jnp.argmax`` -> ``jax.numpy.argmax``."""
+        root, _, rest = dotted.partition(".")
+        root = self.modules[fi.module].imports.get(root, root)
+        return f"{root}.{rest}" if rest else root
+
+
+def _walk_own(fn_node: ast.AST):
+    """Walk a function body WITHOUT descending into nested function
+    definitions (their returns are not this function's returns)."""
+    stack = list(ast.iter_child_nodes(fn_node))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class DeviceTaint:
+    """Per-function device-value classifier over a name environment."""
+
+    def __init__(self, project: Project, fi: FunctionInfo):
+        self.project = project
+        self.fi = fi
+
+    # -- environment ---------------------------------------------------
+    def build_env(self) -> Set[str]:
+        """Names holding device values.  Two forward passes approximate
+        loop-carried flow; the LAST binding of a name wins (rebinding a
+        name to a host value cleans it)."""
+        env: Set[str] = set()
+        args = self.fi.node.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            ann = dotted_name(a.annotation) if a.annotation else None
+            if ann in DEVICE_PARAM_ANNOTATIONS:
+                env.add(a.arg)
+        for _ in range(2):
+            self._pass_stmts(self.fi.node.body, env)
+        return env
+
+    def _bind(self, target: ast.AST, device: bool, env: Set[str]) -> None:
+        if isinstance(target, ast.Name):
+            (env.add if device else env.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, device, env)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, device, env)
+        elif isinstance(target, ast.Subscript) and device:
+            # storing a device value INTO a container taints the container
+            base = target.value
+            while isinstance(base, ast.Subscript):
+                base = base.value
+            if isinstance(base, ast.Name):
+                env.add(base.id)
+
+    def _pass_stmts(self, stmts, env: Set[str]) -> None:
+        for st in stmts:
+            if isinstance(st, ast.Assign):
+                dev = self.is_device(st.value, env)
+                for t in st.targets:
+                    self._bind(t, dev, env)
+            elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                self._bind(st.target, self.is_device(st.value, env), env)
+            elif isinstance(st, ast.AugAssign):
+                if self.is_device(st.value, env):
+                    self._bind(st.target, True, env)
+            elif isinstance(st, ast.For):
+                if self.is_device(st.iter, env):
+                    self._bind(st.target, True, env)
+                self._pass_stmts(st.body + st.orelse, env)
+            elif isinstance(st, (ast.While, ast.If)):
+                self._pass_stmts(st.body + st.orelse, env)
+            elif isinstance(st, ast.With):
+                self._pass_stmts(st.body, env)
+            elif isinstance(st, ast.Try):
+                self._pass_stmts(st.body + st.orelse + st.finalbody, env)
+                for h in st.handlers:
+                    self._pass_stmts(h.body, env)
+            elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # closures see (and run inside) the enclosing flow
+                self._pass_stmts(st.body, env)
+
+    # -- classification ------------------------------------------------
+    def is_device(self, expr: ast.AST, env: Set[str]) -> bool:
+        if isinstance(expr, ast.Name):
+            return expr.id in env
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in HOST_META_ATTRS:
+                return False
+            return (expr.attr in self.project.device_attrs
+                    or self.is_device(expr.value, env))
+        if isinstance(expr, ast.Subscript):
+            return self.is_device(expr.value, env)
+        if isinstance(expr, ast.Call):
+            return self._call_device(expr, env)
+        if isinstance(expr, ast.BinOp):
+            return (self.is_device(expr.left, env)
+                    or self.is_device(expr.right, env))
+        if isinstance(expr, ast.UnaryOp):
+            return self.is_device(expr.operand, env)
+        if isinstance(expr, ast.Compare):
+            return (self.is_device(expr.left, env)
+                    or any(self.is_device(c, env) for c in expr.comparators))
+        if isinstance(expr, ast.BoolOp):
+            return any(self.is_device(v, env) for v in expr.values)
+        if isinstance(expr, ast.IfExp):
+            return (self.is_device(expr.body, env)
+                    or self.is_device(expr.orelse, env))
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_device(e, env) for e in expr.elts)
+        if isinstance(expr, ast.Dict):
+            return any(v is not None and self.is_device(v, env)
+                       for v in expr.values)
+        if isinstance(expr, ast.NamedExpr):
+            return self.is_device(expr.value, env)
+        if isinstance(expr, ast.Starred):
+            return self.is_device(expr.value, env)
+        if isinstance(expr, (ast.DictComp, ast.ListComp, ast.SetComp)):
+            val = expr.value if isinstance(expr, ast.DictComp) else expr.elt
+            return self.is_device(val, env)
+        return False
+
+    def _call_device(self, call: ast.Call, env: Set[str]) -> bool:
+        d = dotted_name(call.func)
+        if d:
+            full = self.project.canonical(self.fi, d)
+            if full in HOST_SAFE_CALLS:
+                return False
+            if full == "jax" or full.startswith(("jax.", "jax_")):
+                return True
+            if full.startswith("numpy.") or full == "numpy":
+                return False
+        targets = self.project.resolve_call(self.fi, call)
+        if targets & self.project.returns_device:
+            return True
+        # method call on a device value: x.astype(...), x.reshape(...)
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr in HOST_RESULT_METHODS:
+                return False
+            if self.is_device(call.func.value, env):
+                return True
+        return False

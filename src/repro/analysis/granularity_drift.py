@@ -1,0 +1,129 @@
+"""Checker 4: granularity drift — tiles declared vs launched vs pinned.
+
+The NFP predictor (Eqs. 12-14 in ``core.nfp``) reads its tile sizes
+from ``core.granularity``; the Pallas kernels read the SAME selectors to
+build their BlockSpecs.  That shared source prevents accidental skew —
+but it also means a careless edit to a selector silently moves BOTH the
+prediction and the kernels, corrupting every calibrated budget without
+any test noticing.  So the baseline pins a third copy: the
+``granularity_contract``, committed and code-reviewed.
+
+Three-way comparison per tile knob:
+
+  GD001  declared (what ``core.granularity`` computes today)
+         != contract (what the committed baseline pins)
+  GD002  launched (the block shape a capture-harness kernel launch
+         actually used) != declared — a kernel hardcoding or override
+         has drifted off the registry
+  GD003  knob missing from the contract (new tile never pinned)
+
+Drift findings are NEVER baseline-suppressible: the only way to clear
+them is to update the pinned contract (``--write-baseline``), which
+shows up in review as an explicit granularity change.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.pallas_contracts import CapturedLaunch, capture_launches
+
+CHECKER = "granularity-drift"
+
+GRANULARITY_PATH = "src/repro/core/granularity.py"
+
+# tile knob -> (capture label, which spec, which block-shape axis)
+_CAPTURE_SOURCES = {
+    "m_attn_decode": ("decode_attention_ragged/n1", 0, -2),
+    "k_block": ("decode_attention_ragged/n1", 1, -2),
+    "m_moe_decode": ("grouped_ffn/decode", 0, 0),
+    "m_ssm": ("selective_scan/decode", 0, 1),
+}
+
+
+def declared_tiles() -> Dict[str, int]:
+    """Tile sizes ``core.granularity`` (and the attention ops constant)
+    declare for the decode regime — the values Eqs. 12-14 consume via
+    ``GranularitySpec.for_backend``."""
+    from repro.core.granularity import (GranularitySpec, select_q_block,
+                                        select_token_block, SSM_CHUNK)
+    from repro.kernels.decode_attention.ops import K_BLOCK
+
+    spec = GranularitySpec.for_backend(n_experts=8, head_dim=128)
+    declared = {
+        "m_attn_decode": int(select_q_block(1, 128)),
+        "m_moe_decode": int(select_token_block(1, 8)),
+        "m_ssm": int(SSM_CHUNK),
+        "k_block": int(K_BLOCK),
+    }
+    # the predictor consumes the SAME numbers through GranularitySpec —
+    # if for_backend diverges from the selectors, that is drift too
+    if spec.m_attn != declared["m_attn_decode"]:
+        declared["m_attn_decode"] = -abs(spec.m_attn)    # force mismatch
+    if spec.m_moe != declared["m_moe_decode"]:
+        declared["m_moe_decode"] = -abs(spec.m_moe)
+    if spec.m_ssm != declared["m_ssm"]:
+        declared["m_ssm"] = -abs(spec.m_ssm)
+    return declared
+
+
+def launched_tiles(captures: List[CapturedLaunch]) -> Dict[str, int]:
+    """Block shapes the capture-harness launches actually used."""
+    by_label = {c.label: c for c in captures}
+    out: Dict[str, int] = {}
+    for knob, (label, spec_i, axis) in _CAPTURE_SOURCES.items():
+        launch = by_label.get(label)
+        if launch is None or spec_i >= len(launch.in_specs):
+            continue
+        block = launch.in_specs[spec_i].block_shape
+        if block:
+            out[knob] = int(block[axis])
+    return out
+
+
+def check_drift(contract: Optional[Dict[str, int]],
+                declared: Optional[Dict[str, int]] = None,
+                launched: Optional[Dict[str, int]] = None,
+                captures: Optional[List[CapturedLaunch]] = None
+                ) -> List[Finding]:
+    if declared is None:
+        declared = declared_tiles()
+    if launched is None:
+        if captures is None:
+            captures = capture_launches()
+        launched = launched_tiles(captures)
+    contract = contract or {}
+    out: List[Finding] = []
+
+    def emit(rule: str, knob: str, message: str) -> None:
+        out.append(Finding(CHECKER, rule, GRANULARITY_PATH, 1, knob,
+                           message))
+
+    for knob in sorted(declared):
+        dec = declared[knob]
+        if knob not in contract:
+            emit("GD003", knob,
+                 f"tile knob {knob!r} (= {dec}) is not pinned in the "
+                 "baseline's granularity_contract; regenerate with "
+                 "--write-baseline to pin it")
+        elif contract[knob] != dec:
+            emit("GD001", knob,
+                 f"core.granularity declares {knob}={dec} but the pinned "
+                 f"contract says {contract[knob]}: the Eq. 12-14 "
+                 "predictor inputs changed — if intentional, update the "
+                 "contract via --write-baseline (and recalibrate)")
+        lau = launched.get(knob)
+        if lau is not None and lau != dec:
+            emit("GD002", knob,
+                 f"kernels launch with {knob}={lau} but core.granularity "
+                 f"declares {dec}: kernel block shapes have drifted off "
+                 "the registry the NFP predictor reads — the predicted "
+                 "boundary no longer describes the kernels serving it")
+    return out
+
+
+def check(project=None, roots=None,
+          captures: Optional[List[CapturedLaunch]] = None,
+          contract: Optional[Dict[str, int]] = None) -> List[Finding]:
+    del project, roots
+    return check_drift(contract, captures=captures)

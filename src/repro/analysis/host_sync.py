@@ -1,0 +1,131 @@
+"""Checker 1: blocking device->host syncs in the serving hot path.
+
+Walks every project function reachable from the serving roots
+(``ServingLoop.step`` / ``DecodeEngine.decode_slots`` by default) and
+flags expressions that force the host to WAIT on the device:
+
+  HS001  int()/float()/bool() on a device value — blocks until the
+         scalar materializes (the classic per-step budget-read stall)
+  HS002  np.asarray()/np.array() on a device value — synchronous full
+         transfer of the operand
+  HS003  .item()/.tolist() on a device value
+  HS004  Python iteration (for / list / sorted / comprehension) over a
+         device array — one sync PER ELEMENT
+  HS005  jax.device_get / block_until_ready — unconditionally
+
+Host->device uploads (``jnp.asarray(host)``) are NOT flagged: they are
+cheap and asynchronous; the principle the serving loop follows is that
+per-step control decisions read host mirrors, and device results cross
+back once per step through sanctioned, pragma-marked transfers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.callgraph import (DeviceTaint, FunctionInfo, Project,
+                                      dotted_name)
+from repro.analysis.findings import (Finding, pragma_allows, scan_pragmas,
+                                     snippet_of)
+
+CHECKER = "host-sync"
+
+DEFAULT_ROOTS = (
+    "repro.serving.scheduler.ServingLoop.step",
+    "repro.serving.engine.DecodeEngine.decode_slots",
+)
+
+_SCALAR_CASTS = {"int", "float", "bool", "complex"}
+_ITER_BUILTINS = {"list", "tuple", "sorted", "set", "sum", "max", "min",
+                  "enumerate", "zip"}
+_NUMPY_PULLS = {"numpy.asarray", "numpy.array", "numpy.copy",
+                "numpy.ascontiguousarray"}
+
+
+def check(project: Project, roots=DEFAULT_ROOTS) -> List[Finding]:
+    findings: List[Finding] = []
+    hot = project.reachable(roots)
+    for qual in sorted(hot):
+        fi = project.functions[qual]
+        findings.extend(_check_function(project, fi))
+    return findings
+
+
+def _check_function(project: Project, fi: FunctionInfo) -> List[Finding]:
+    info = project.modules[fi.module]
+    pragmas = scan_pragmas(info.source)
+    taint = DeviceTaint(project, fi)
+    env = taint.build_env()
+    out: List[Finding] = []
+    seen: Set[int] = set()
+
+    def emit(node: ast.AST, rule: str, message: str) -> None:
+        if id(node) in seen or pragma_allows(pragmas, node, CHECKER, rule):
+            return
+        seen.add(id(node))
+        rel = fi.path.relative_to(project.rel_to).as_posix()
+        out.append(Finding(CHECKER, rule, rel, node.lineno, fi.qualname,
+                           message, snippet_of(info.source, node)))
+
+    def visit_expr(node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                _check_call(sub)
+            elif isinstance(sub, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                  ast.GeneratorExp)):
+                for gen in sub.generators:
+                    if taint.is_device(gen.iter, env):
+                        emit(gen.iter, "HS004",
+                             "comprehension iterates a device array "
+                             "(one blocking transfer per element)")
+
+    def _check_call(call: ast.Call) -> None:
+        func = call.func
+        d = dotted_name(func)
+        full = project.canonical(fi, d) if d else ""
+        if full in ("jax.device_get", "jax.block_until_ready"):
+            emit(call, "HS005",
+                 f"{d} is an unconditional blocking device->host sync")
+            return
+        if (isinstance(func, ast.Attribute)
+                and func.attr == "block_until_ready"):
+            emit(call, "HS005",
+                 ".block_until_ready() blocks the host on device work")
+            return
+        if not call.args:
+            return
+        arg0 = call.args[0]
+        if isinstance(func, ast.Name) and func.id in _SCALAR_CASTS:
+            if taint.is_device(arg0, env):
+                emit(call, "HS001",
+                     f"{func.id}() on a device value blocks until the "
+                     "device scalar materializes; keep a host mirror or "
+                     "batch the readback")
+        elif isinstance(func, ast.Name) and func.id in _ITER_BUILTINS:
+            if taint.is_device(arg0, env):
+                emit(call, "HS004",
+                     f"{func.id}() over a device array forces a blocking "
+                     "transfer; pull once with a sanctioned np.asarray "
+                     "instead")
+        elif full in _NUMPY_PULLS:
+            if taint.is_device(arg0, env):
+                emit(call, "HS002",
+                     f"{d}() on a device value is a synchronous full "
+                     "transfer; move the computation on-device and "
+                     "transfer one small result per step")
+
+    # statement-level sinks: for-loops over device arrays, .item()
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.For) and taint.is_device(node.iter, env):
+            emit(node.iter, "HS004",
+                 "for-loop iterates a device array (one blocking "
+                 "transfer per element)")
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr in ("item", "tolist")
+              and taint.is_device(node.func.value, env)):
+            emit(node, "HS003",
+                 f".{node.func.attr}() on a device value is a blocking "
+                 "scalar readback")
+    visit_expr(fi.node)
+    return out

@@ -1,0 +1,283 @@
+"""Checker 2: recompile hazards around ``jax.jit``.
+
+One compiled executable per (shapes, static args) is the contract the
+serving stack's throughput rests on — a shape or static value that
+varies per request silently turns every step into a fresh XLA compile.
+
+  RH001  jax.jit (or functools.partial(jax.jit, ...)) CONSTRUCTED
+         inside a function body: the jit cache is keyed on the wrapper
+         object, so a per-call wrapper compiles every single call
+  RH002  a call to a project-jitted function feeds a SHAPE-DERIVED
+         Python scalar into a static_argnames parameter: one compile
+         per distinct runtime shape
+  RH003  an array built with shape-derived dimensions (np.zeros((b,
+         len(x))), np.pad by a data-dependent amount, np.arange(n), ...)
+         flows into a project-jitted call: a dynamic operand shape, one
+         compile per distinct value
+
+"Shape-derived" taint is STICKY (a branch that taints a name keeps it
+tainted — the hazard exists if ANY path produces a varying shape) and is
+cleansed only by the power-of-two bucketing helpers (functions whose
+name contains "bucket"): bucketing is exactly the sanctioned way to turn
+an unbounded shape family into a small compile set.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.callgraph import (FunctionInfo, Project, dotted_name)
+from repro.analysis.findings import (Finding, pragma_allows, scan_pragmas,
+                                     snippet_of)
+
+CHECKER = "recompile-hazard"
+
+_ARRAY_CTORS = {"zeros", "ones", "full", "empty", "arange"}
+_PROPAGATING = {"concatenate", "pad", "stack", "repeat", "tile", "append",
+                "asarray", "array", "broadcast_to", "reshape"}
+
+
+def check(project: Project, roots=None) -> List[Finding]:
+    """Scan EVERY project function (hazards outside the hot path still
+    poison the compile cache the hot path shares)."""
+    del roots
+    out: List[Finding] = []
+    for qual in sorted(project.functions):
+        out.extend(_check_function(project, project.functions[qual]))
+    return out
+
+
+class _ShapeTaint:
+    """Sticky shape-derived / dynamic-shape-array name sets."""
+
+    def __init__(self, project: Project, fi: FunctionInfo):
+        self.project = project
+        self.fi = fi
+        self.shape_vars: Set[str] = set()   # host scalars derived of shapes
+        self.dyn_vars: Set[str] = set()     # arrays with derived dimensions
+
+    def build(self) -> None:
+        for _ in range(2):
+            self._pass(self.fi.node.body)
+
+    # -- classification ------------------------------------------------
+    def _cleansed(self, call: ast.Call) -> bool:
+        d = dotted_name(call.func) or ""
+        return "bucket" in d.split(".")[-1]
+
+    def shape_derived(self, expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Attribute):
+            return expr.attr == "shape" or self.shape_derived(expr.value)
+        if isinstance(expr, ast.Name):
+            return expr.id in self.shape_vars
+        if isinstance(expr, ast.Subscript):
+            return self.shape_derived(expr.value)
+        if isinstance(expr, ast.Call):
+            if self._cleansed(expr):
+                return False
+            d = dotted_name(expr.func) or ""
+            if d == "len" or d.endswith(".shape"):
+                return True
+            if self.project.canonical(self.fi, d) in (
+                    "jax.numpy.shape", "numpy.shape"):
+                return True
+            # method calls on a tainted receiver stay tainted
+            # (lens.items(), by_len.values(), ...)
+            if (isinstance(expr.func, ast.Attribute)
+                    and self.shape_derived(expr.func.value)):
+                return True
+            # calls propagate taint from their arguments (min/max/sum/
+            # round_up of a shape-derived value is still shape-derived)
+            return any(self.shape_derived(a) for a in expr.args)
+        if isinstance(expr, ast.BinOp):
+            return (self.shape_derived(expr.left)
+                    or self.shape_derived(expr.right))
+        if isinstance(expr, ast.UnaryOp):
+            return self.shape_derived(expr.operand)
+        if isinstance(expr, ast.IfExp):
+            return (self.shape_derived(expr.body)
+                    or self.shape_derived(expr.orelse))
+        if isinstance(expr, ast.Slice):
+            return any(e is not None and self.shape_derived(e)
+                       for e in (expr.lower, expr.upper, expr.step))
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.shape_derived(e) for e in expr.elts)
+        if isinstance(expr, ast.Dict):
+            return any(v is not None and self.shape_derived(v)
+                       for v in expr.values)
+        if isinstance(expr, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            if any(self._iter_tainted(g.iter) for g in expr.generators):
+                return True
+            val = expr.value if isinstance(expr, ast.DictComp) else expr.elt
+            return self.shape_derived(val)
+        return False
+
+    def _iter_tainted(self, it: ast.AST) -> bool:
+        return self.shape_derived(it) or self.dynamic_array(it)
+
+    def dynamic_array(self, expr: ast.AST) -> bool:
+        """Array-valued expression with a shape-derived dimension."""
+        if isinstance(expr, ast.Name):
+            return expr.id in self.dyn_vars
+        if isinstance(expr, ast.Subscript):
+            # x[:n] with a derived bound IS a dynamic slice
+            if self.shape_derived(expr.slice):
+                return True
+            return self.dynamic_array(expr.value)
+        if isinstance(expr, ast.Call):
+            d = dotted_name(expr.func) or ""
+            leaf = d.split(".")[-1]
+            if leaf in _ARRAY_CTORS:
+                if any(self.shape_derived(a) for a in expr.args):
+                    return True
+            if leaf in _PROPAGATING or leaf in _ARRAY_CTORS:
+                if any(self.dynamic_array(a) or self.shape_derived(a)
+                       for a in expr.args):
+                    return True
+            return False
+        if isinstance(expr, ast.BinOp):
+            return (self.dynamic_array(expr.left)
+                    or self.dynamic_array(expr.right))
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self.dynamic_array(e) for e in expr.elts)
+        return False
+
+    # -- sticky environment --------------------------------------------
+    def _mark(self, target: ast.AST, shape: bool, dyn: bool) -> None:
+        if isinstance(target, ast.Name):
+            if shape:
+                self.shape_vars.add(target.id)
+            if dyn:
+                self.dyn_vars.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._mark(e, shape, dyn)
+        elif isinstance(target, ast.Starred):
+            self._mark(target.value, shape, dyn)
+
+    def _pass(self, stmts) -> None:
+        for st in stmts:
+            if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = st.value
+                if value is None:
+                    continue
+                targets = (st.targets if isinstance(st, ast.Assign)
+                           else [st.target])
+                shape = self.shape_derived(value)
+                dyn = self.dynamic_array(value)
+                for t in targets:
+                    self._mark(t, shape, dyn)
+            elif isinstance(st, ast.Expr) and isinstance(st.value, ast.Call):
+                # container mutation: d.setdefault(shape_derived, ...) /
+                # xs.append(dyn) taints the container — walk nested
+                # method chains (by_len.setdefault(p, []).append(s))
+                # down to the base Name, collecting every call's args
+                node, args = st.value, []
+                while isinstance(node, ast.Call):
+                    args.extend(node.args)
+                    node = node.func
+                    if isinstance(node, ast.Attribute):
+                        if node.attr not in ("append", "setdefault", "add",
+                                             "insert", "extend", "update"):
+                            break
+                        node = node.value
+                if isinstance(node, ast.Name):
+                    if any(self.shape_derived(a) for a in args):
+                        self.shape_vars.add(node.id)
+                    if any(self.dynamic_array(a) for a in args):
+                        self.dyn_vars.add(node.id)
+            elif isinstance(st, ast.For):
+                if self._iter_tainted(st.iter):
+                    self._mark(st.target, True, False)
+                self._pass(st.body + st.orelse)
+            elif isinstance(st, (ast.While, ast.If)):
+                self._pass(st.body + st.orelse)
+            elif isinstance(st, ast.With):
+                self._pass(st.body)
+            elif isinstance(st, ast.Try):
+                self._pass(st.body + st.orelse + st.finalbody)
+                for h in st.handlers:
+                    self._pass(h.body)
+            elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._pass(st.body)
+
+
+def _jit_constructor(call: ast.Call) -> bool:
+    d = dotted_name(call.func)
+    if d in ("jax.jit", "jit"):
+        return True
+    if d in ("functools.partial", "partial") and call.args:
+        return dotted_name(call.args[0]) in ("jax.jit", "jit")
+    return False
+
+
+def _check_function(project: Project, fi: FunctionInfo) -> List[Finding]:
+    info = project.modules[fi.module]
+    pragmas = scan_pragmas(info.source)
+    taint = _ShapeTaint(project, fi)
+    taint.build()
+    out: List[Finding] = []
+    rel = fi.path.relative_to(project.rel_to).as_posix()
+
+    def emit(node: ast.AST, rule: str, message: str) -> None:
+        if pragma_allows(pragmas, node, CHECKER, rule):
+            return
+        out.append(Finding(CHECKER, rule, rel, node.lineno, fi.qualname,
+                           message, snippet_of(info.source, node)))
+
+    # walk the BODY only: the function's own decorators are where a
+    # legitimate module-scope jit lives (a nested def's jit decorator,
+    # reached through the body walk, IS a per-call construction)
+    for node in (n for stmt in fi.node.body for n in ast.walk(stmt)):
+        if not isinstance(node, ast.Call):
+            continue
+        if _jit_constructor(node):
+            emit(node, "RH001",
+                 "jax.jit constructed inside a function body: the "
+                 "compile cache keys on the wrapper object, so every "
+                 "call builds a fresh executable — hoist to module "
+                 "scope or cache the wrapper")
+            continue
+        targets = project.resolve_call(fi, node)
+        jitted = [project.functions[q] for q in targets
+                  if project.functions[q].is_jitted]
+        for callee in jitted:
+            _check_jit_callsite(node, callee, taint, emit)
+    return out
+
+
+def _check_jit_callsite(call: ast.Call, callee: FunctionInfo,
+                        taint: _ShapeTaint, emit) -> None:
+    static = set(callee.static_argnames)
+
+    def param_for(i: int) -> Optional[str]:
+        return callee.params[i] if i < len(callee.params) else None
+
+    for i, arg in enumerate(call.args):
+        if isinstance(arg, ast.Starred):
+            continue
+        name = param_for(i)
+        if name in static and taint.shape_derived(arg):
+            emit(arg, "RH002",
+                 f"static arg {name!r} of jitted {callee.name}() is "
+                 "shape-derived: one compile per distinct runtime "
+                 "shape — bucket it or make it a traced operand")
+        elif name not in static and taint.dynamic_array(arg):
+            emit(arg, "RH003",
+                 f"operand {name or i!r} of jitted {callee.name}() has "
+                 "shape-derived dimensions that bypass power-of-two "
+                 "bucketing: one compile per distinct shape")
+    for kw in call.keywords:
+        if kw.arg is None:
+            continue
+        if kw.arg in static and taint.shape_derived(kw.value):
+            emit(kw.value, "RH002",
+                 f"static arg {kw.arg!r} of jitted {callee.name}() is "
+                 "shape-derived: one compile per distinct runtime "
+                 "shape — bucket it or make it a traced operand")
+        elif kw.arg not in static and taint.dynamic_array(kw.value):
+            emit(kw.value, "RH003",
+                 f"operand {kw.arg!r} of jitted {callee.name}() has "
+                 "shape-derived dimensions that bypass power-of-two "
+                 "bucketing: one compile per distinct shape")

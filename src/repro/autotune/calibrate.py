@@ -142,18 +142,22 @@ def _wallclock_time_fn(engine, warmup: int, rounds: int,
     Engine state (slot lengths, kernel flag) is saved and restored
     around each sample, so calibration can run on a warm engine."""
     import jax.numpy as jnp
+    import numpy as np
 
     def fn(n: int, ell: int, use_kernel: bool) -> Tuple[float, float]:
         saved_lens = engine.slot_lens
+        saved_lens_host = engine.slot_lens_host.copy()
         saved_kernel = engine.use_kernel
         try:
             engine.slot_lens = jnp.full((engine.batch,), ell, jnp.int32)
+            engine.slot_lens_host = np.full((engine.batch,), ell, np.int64)
             engine.use_kernel = use_kernel
             toks = jnp.zeros((engine.batch, n), jnp.int32)
             return time_callable(lambda: engine.decode_slots(toks),
                                  warmup, rounds, iters)
         finally:
             engine.slot_lens = saved_lens
+            engine.slot_lens_host = saved_lens_host
             engine.use_kernel = saved_kernel
     return fn
 
@@ -192,7 +196,8 @@ def calibrate_engine(engine, modes: Sequence[str] = DEFAULT_MODES,
         buckets = sorted({min(b, engine.max_len - max_n)
                           for b in context_buckets(engine.max_len)})
         buckets = [b for b in buckets if b >= 1]
-        assert buckets        # max_len - max_n >= 1 by the check above
+        if not buckets:       # unreachable: max_len - max_n >= 1 above
+            raise RuntimeError("derived an empty context-bucket grid")
     if backend == "wallclock":
         if max(buckets) + max_n > engine.max_len:
             raise ValueError(

@@ -125,7 +125,10 @@ class ArchConfig:
     # ------------------------------------------------------------------
     def pattern(self) -> Tuple[str, ...]:
         if self.layer_pattern is not None:
-            assert len(self.layer_pattern) == self.n_layers
+            if len(self.layer_pattern) != self.n_layers:
+                raise ValueError(
+                    f"layer_pattern has {len(self.layer_pattern)} entries "
+                    f"for n_layers={self.n_layers}")
             return self.layer_pattern
         return tuple([LAYER_ATTN] * self.n_layers)
 

@@ -84,7 +84,10 @@ def train_cell(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
     if dp_only:
         n_micro = 1            # full batch spreads over all 256 chips
     mb = shape.global_batch // n_micro
-    assert shape.global_batch % n_micro == 0
+    if shape.global_batch % n_micro:
+        raise ValueError(
+            f"global_batch {shape.global_batch} is not divisible by "
+            f"n_micro={n_micro}")
     lead = () if n_micro == 1 else (n_micro,)
     lead_ps = () if n_micro == 1 else (None,)
     tokens = SDS((*lead, mb, shape.seq_len), jnp.int32)

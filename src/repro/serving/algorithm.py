@@ -31,7 +31,7 @@ from typing import Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import DecodeEngine
+from repro.serving.engine import DecodeEngine, greedy_tokens
 
 __all__ = ["DecodeStats", "ParallelDecodeAlgorithm", "SlotAdapter"]
 
@@ -114,7 +114,9 @@ class ParallelDecodeAlgorithm:
         target model reproduces, plus the model's own next token."""
         block = np.concatenate([[pending], drafts]).astype(np.int64)
         logits, new_cache, hidden = self.forward_block(block)
-        preds = np.asarray(jnp.argmax(logits[0], axis=-1))
+        # argmax runs jitted on device; only the (n,) i32 winners cross
+        # to the host (the accept loop below is inherently host-side)
+        preds = np.asarray(greedy_tokens(logits[0]))  # analysis: allow-host-sync
         k = 0
         while k < len(drafts) and preds[k] == drafts[k]:
             k += 1
@@ -241,7 +243,10 @@ class SlotAdapter:
                 drafts[s] = d
                 tokens[s, 1:1 + len(d)] = d
         logits, new_cache, hidden = loop.shared_forward(tokens, budget)
-        preds = np.asarray(jnp.argmax(logits, axis=-1))   # (batch, width)
+        # greedy winners computed ON DEVICE (jitted); the only per-step
+        # device->host transfer is this (batch, width) i32 block — the
+        # token stream emission every serving loop fundamentally needs
+        preds = np.asarray(greedy_tokens(logits))  # analysis: allow-host-sync
         advances = np.zeros((eng.batch,), np.int32)
         for s in slots:
             req = loop.active[s]

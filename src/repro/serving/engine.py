@@ -12,7 +12,7 @@ near-free for the current arch x hardware x batch x context.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -60,6 +60,15 @@ def _decode_paged_fn(params, cfg: ArchConfig, tokens, cache, slot_lens,
 
 
 @jax.jit
+def greedy_tokens(logits):
+    """Greedy token selection ON DEVICE.  Verify loops call this and
+    transfer only the small (b, n) int32 result to the host — pulling
+    the raw (b, n, vocab) logits across per step is the kind of
+    hot-path transfer ``repro.analysis`` exists to flag."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@jax.jit
 def _copy_pool_blocks(cache, src, dst):
     """Copy pool blocks src -> dst across every layer (the COW device
     op).  Pool leaves are (layers, n_phys, block, ...): index axis 1."""
@@ -98,7 +107,12 @@ class DecodeEngine:
     hardware: HardwareSpec = TPU_V5E
     use_kernel: bool = False
     cache: Optional[Dict] = None
-    cache_len: Array = field(default_factory=lambda: jnp.zeros((), jnp.int32))
+    # committed positions of the single-request drivers.  A HOST int on
+    # purpose: every step's budget/width decision reads it, and a device
+    # scalar here cost one blocking device->host sync per decode step
+    # (it is re-uploaded as a traced scalar by the jitted forwards, which
+    # is cheap and non-blocking in the other direction).
+    cache_len: int = 0
     paged: Optional[PagedKVConfig] = None
 
     def __post_init__(self):
@@ -125,8 +139,14 @@ class DecodeEngine:
                       else 128),
             kv_page=(self.paged.block_size if self.paged else 0))
         # per-slot cache lengths for the scheduler's slotted mode; the
-        # single-request drivers keep using the scalar ``cache_len``
+        # single-request drivers keep using the scalar ``cache_len``.
+        # ``slot_lens`` rides the jitted decode forwards (per-row ragged
+        # lengths), ``slot_lens_host`` is its host-side mirror: every
+        # update comes from host values (prompt lengths, accepted
+        # counts), so the scheduler's budget/admission math never has to
+        # block on a device read mid-decode.
         self.slot_lens = jnp.zeros((self.batch,), jnp.int32)
+        self.slot_lens_host = np.zeros((self.batch,), np.int64)
         self._bt_device: Optional[Array] = None
         # (b, d) final-norm hidden of the last prefilled position (MTP
         # proposals read it); one entry per bucketed prefill forward
@@ -150,9 +170,12 @@ class DecodeEngine:
     # ------------------------------------------------------------------
     def nfp_budget(self, eps: float = 0.2, routing: str = "balanced",
                    ell: Optional[int] = None) -> int:
-        """Near-free position budget for the CURRENT state (Sec. 6)."""
+        """Near-free position budget for the CURRENT state (Sec. 6).
+
+        Pure host math: ``cache_len`` is the host-side committed length,
+        so a per-step budget query costs no device synchronization."""
         if ell is None:
-            ell = int(self.cache_len)
+            ell = self.cache_len
         ell = max(int(ell), 1)
         return parallelism_budget(self.cfg, self.hardware, self.gran,
                                   self.batch, ell, eps, routing)
@@ -168,7 +191,7 @@ class DecodeEngine:
         logits, self.cache, hidden = _prefill_fn(self.params, self.cfg,
                                                  tokens, self.cache,
                                                  self.use_kernel)
-        self.cache_len = jnp.asarray(tokens.shape[1], jnp.int32)
+        self.cache_len = int(tokens.shape[1])
         self.last_hidden = hidden[:, -1]
         return logits[:, -1]
 
@@ -186,7 +209,7 @@ class DecodeEngine:
         adv = n if advance is None else advance
         if adv > 0:
             self.cache = new_cache
-            self.cache_len = self.cache_len + adv
+            self.cache_len = self.cache_len + int(adv)
         return logits
 
     def peek_step(self, tokens: Array) -> Tuple[Array, Dict, Array]:
@@ -199,7 +222,7 @@ class DecodeEngine:
     def commit(self, new_cache: Dict, n_accepted) -> None:
         self._require_dense("commit")
         self.cache = new_cache
-        self.cache_len = self.cache_len + n_accepted
+        self.cache_len = self.cache_len + int(n_accepted)
 
     # ------------------------------------------------------------------
     # Slotted multi-request mode (repro.serving.scheduler).  Each batch
@@ -210,6 +233,13 @@ class DecodeEngine:
     def _row_mask(self, rows, like: Array) -> Array:
         m = jnp.zeros((self.batch,), bool).at[jnp.asarray(rows)].set(True)
         return m.reshape((1, self.batch) + (1,) * (like.ndim - 2))
+
+    def _set_slot_len(self, slot: int, value: int) -> None:
+        """Update one slot's committed length on device AND in the host
+        mirror — ``value`` is always host-known (a prompt length or a
+        cached-prefix length), so the mirror costs nothing."""
+        self.slot_lens = self.slot_lens.at[slot].set(value)
+        self.slot_lens_host[slot] = int(value)
 
     def prefill_bucket(self, p: int) -> int:
         """Power-of-two prompt-length bucket (floor 8, ceiling max_len):
@@ -282,7 +312,7 @@ class DecodeEngine:
                                            new, old),
                 self.cache, new_cache)
             for s in rows:
-                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                self._set_slot_len(s, lens[s])
                 out[s] = (logits[s, lens[s] - 1], hidden[s, lens[s] - 1])
             self.prefill_log.append({"slots": sorted(rows),
                                      "bucket": width,
@@ -364,7 +394,7 @@ class DecodeEngine:
                 self.cache, scratch, jnp.asarray(flats, jnp.int32),
                 jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32))
             for s in full:
-                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                self._set_slot_len(s, lens[s])
                 out[s] = (logits[s, lens[s] - 1], hidden[s, lens[s] - 1])
             self.prefill_log.append({"slots": full, "bucket": width,
                                      "cached_tokens": 0,
@@ -373,8 +403,7 @@ class DecodeEngine:
         if hits:
             suf = {s: lens[s] - plans[s].cached_len for s in hits}
             for s in hits:
-                self.slot_lens = self.slot_lens.at[s].set(
-                    plans[s].cached_len)
+                self._set_slot_len(s, plans[s].cached_len)
             width = self.prefill_bucket(max(suf.values()))
             toks = np.zeros((self.batch, width), np.int32)
             for s in hits:
@@ -387,7 +416,7 @@ class DecodeEngine:
             # which no mask ever reads back
             self.cache = new_cache
             for s in hits:
-                self.slot_lens = self.slot_lens.at[s].set(lens[s])
+                self._set_slot_len(s, lens[s])
                 out[s] = (logits[s, suf[s] - 1], hidden[s, suf[s] - 1])
             self.prefill_log.append({
                 "slots": hits, "bucket": width,
@@ -423,7 +452,9 @@ class DecodeEngine:
         bump their length; rows with 0 are untouched (inactive slots or
         fully-rejected blocks).  The row mask is built from the advances
         ON DEVICE — materializing it on the host would force a device
-        sync every scheduler step.
+        sync every scheduler step.  ``advances`` must be HOST values
+        (the adapters' accept counts always are): they also feed the
+        ``slot_lens_host`` mirror the scheduler budgets against.
 
         A paged engine adopts the new pool wholesale: the forward's
         writes only ever touch pages the writing slot exclusively owns
@@ -431,7 +462,9 @@ class DecodeEngine:
         rows that advanced 0 only wrote past their committed length —
         positions every mask skips until a later forward overwrites
         them.  Per-row selection would therefore change nothing."""
-        adv = jnp.asarray(advances, jnp.int32)
+        adv_host = np.asarray(advances, np.int64)
+        adv = jnp.asarray(adv_host, jnp.int32)
+        self.slot_lens_host = self.slot_lens_host + adv_host
         if self.manager is not None:
             self.cache = new_cache
             self.slot_lens = self.slot_lens + adv
@@ -448,7 +481,7 @@ class DecodeEngine:
         if self.manager is not None:
             self.manager.release(slot)
             self._bt_device = None             # tables changed
-        self.slot_lens = self.slot_lens.at[slot].set(0)
+        self._set_slot_len(slot, 0)
 
     # ------------------------------------------------------------------
     def greedy_generate(self, prompt: Array, steps: int) -> Array:

@@ -41,9 +41,14 @@ def init_mtp_heads(key, d_model: int, vocab: int, n_heads: int,
                                       dtype=dtype) for k in ks])}
 
 
+@jax.jit
 def mtp_propose(heads: Dict, hidden: Array) -> Array:
     """hidden: (b, d) last-position hidden state -> (b, n_heads) greedy
-    proposals for offsets +2..+n_heads+1."""
+    proposals for offsets +2..+n_heads+1.
+
+    Jitted: the head-bank einsum AND its argmax run as one device
+    dispatch, so callers transfer only the (b, n_heads) i32 proposals —
+    never the (b, n_heads, vocab) head logits."""
     logits = jnp.einsum("bd,hdv->bhv", hidden.astype(jnp.float32),
                         heads["heads"].astype(jnp.float32))
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -129,15 +134,17 @@ class MTPSlotAdapter(SlotAdapter):
         req.hidden = hidden
 
     def propose(self, req, n: int) -> np.ndarray:
-        return np.asarray(mtp_propose(self.heads, req.hidden[None])
-                          )[0][:n].astype(np.int64)
+        return np.asarray(  # analysis: allow-host-sync — (1, heads) i32
+            mtp_propose(self.heads, req.hidden[None]))[0][:n].astype(np.int64)
 
     def propose_rows(self, want):
         # ONE head-bank dispatch over every row's hidden state — the
-        # per-row default would pay n_active device round-trips per step
+        # per-row default would pay n_active device round-trips per step.
+        # The transfer is the (rows, heads) i32 proposal block only.
         rows = sorted(want)
         hid = jnp.stack([self.loop.active[s].hidden for s in rows])
-        props = np.asarray(mtp_propose(self.heads, hid)).astype(np.int64)
+        props = np.asarray(  # analysis: allow-host-sync
+            mtp_propose(self.heads, hid)).astype(np.int64)
         return {s: props[i][:want[s]] for i, s in enumerate(rows)}
 
     def observe(self, req, k: int, hidden) -> None:

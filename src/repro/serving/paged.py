@@ -98,17 +98,22 @@ class BlockAllocator:
         if not self._free:
             raise RuntimeError("KV block pool exhausted")
         b = self._free.popleft()
-        assert self.refcount[b] == 0
+        if self.refcount[b] != 0:
+            raise RuntimeError(
+                f"block {b} was on the free list with refcount "
+                f"{self.refcount[b]}")
         self.refcount[b] = 1
         return b
 
     def incref(self, b: int) -> None:
-        assert self.refcount[b] > 0, f"incref on free block {b}"
+        if self.refcount[b] <= 0:
+            raise RuntimeError(f"incref on free block {b}")
         self.refcount[b] += 1
 
     def decref(self, b: int) -> bool:
         """Drop one hold; returns True when the block became free."""
-        assert self.refcount[b] > 0, f"decref on free block {b}"
+        if self.refcount[b] <= 0:
+            raise RuntimeError(f"decref on free block {b}")
         self.refcount[b] -= 1
         if self.refcount[b] == 0:
             self._free.append(b)

@@ -197,8 +197,11 @@ class ServingLoop:
         """Position budget at the CURRENT longest active context:
         the analytic NFP budget, refined by the ``BudgetController``
         when one is attached (predicted / calibrated / applied
-        provenance lands in each forward's ``step_log`` entry)."""
-        lens = np.asarray(self.engine.slot_lens)
+        provenance lands in each forward's ``step_log`` entry).
+
+        Reads the engine's HOST mirror of the slot lengths — budgeting
+        must never block on a device read in the decode hot path."""
+        lens = self.engine.slot_lens_host
         ell = max(int(lens.max()) if lens.size else 1, 1)
         analytic = self.engine.nfp_budget(self.eps, ell=ell)
         info = {"ell": ell, "analytic": analytic, "applied": analytic}
@@ -231,7 +234,7 @@ class ServingLoop:
         admitted: Dict[int, Request] = {}
         mgr = self.engine.manager
         blocks_left = mgr.available_blocks() if mgr is not None else 0
-        ell = int(np.asarray(self.engine.slot_lens).max())
+        ell = int(self.engine.slot_lens_host.max())
         while self.waiting and self.free_slots:
             # prospective budget once the head-of-queue prompt lands
             cand = self.waiting[0]
@@ -284,7 +287,7 @@ class ServingLoop:
             # block size, so executed/grid tiles stay honest under paging
             extra["k_block"] = self.engine.manager.block_size
         return slack_report(
-            width, np.asarray(self.engine.slot_lens), self.engine.max_len,
+            width, self.engine.slot_lens_host, self.engine.max_len,
             head_dim=a.head_dim,
             window=a.window if a.kind == "swa" else None,
             active=active, **extra)

@@ -89,7 +89,7 @@ class SpeculativeDecoder(ParallelDecodeAlgorithm):
             if a != int(b):
                 break
             sync += 1
-        draft.cache_len = jnp.asarray(sync, jnp.int32)
+        draft.cache_len = sync
         self._draft_tokens = self._draft_tokens[:sync]
         chunk = np.asarray(full[sync:], np.int64)       # >= 1: pending is new
         toks = jnp.broadcast_to(jnp.asarray(chunk[None], jnp.int32),

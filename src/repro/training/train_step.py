@@ -57,10 +57,15 @@ def grad_accum_fn(params, cfg: ArchConfig, batch: Dict, n_micro: int,
     """
     if batch["tokens"].ndim == 3:
         micro = batch
-        assert batch["tokens"].shape[0] == n_micro
+        if batch["tokens"].shape[0] != n_micro:
+            raise ValueError(
+                f"pre-split batch has {batch['tokens'].shape[0]} "
+                f"microbatches, expected n_micro={n_micro}")
     else:
         b = batch["tokens"].shape[0]
-        assert b % n_micro == 0, (b, n_micro)
+        if b % n_micro:
+            raise ValueError(
+                f"batch size {b} is not divisible by n_micro={n_micro}")
         mb = b // n_micro
         micro = jax.tree.map(
             lambda x: x.reshape(n_micro, mb, *x.shape[1:]), batch)
