@@ -8,6 +8,10 @@ Multi-request (budget-aware continuous batching):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --tiny \
       --requests 8 --slots 4 --serve-mode speculative --tokens 32
 
+Trace replay (production-shaped traffic on the simulated clock):
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm_3b --tiny \
+      --trace pinned --requests 8 --slots 4 --serve-mode speculative
+
 Loads (or random-inits) a model, builds the decode engine, selects the
 parallelism level from the NFP principle for the current hardware +
 batch + context, and serves generation — one request through a
@@ -144,6 +148,72 @@ def _multi_request(args, cfg, params) -> None:
         print(f"  req {rid}: {toks[:16]} ...")
 
 
+def _trace_replay(args, cfg, params) -> None:
+    """--trace: replay a loadgen trace (the pinned BENCH spec or a
+    trace JSON file) through the ServingLoop on the roofline-simulated
+    clock of the FULL-SIZE --arch config, with backpressure + SLO-
+    priority admission and preemption enabled."""
+    from repro.core import GranularitySpec
+    from repro.core.simulate import decode_forward_cost
+    from repro.loadgen import (Trace, generate_trace, pinned_spec,
+                               replay_trace)
+    from repro.serving import AdmissionConfig
+
+    if args.trace == "pinned":
+        n = args.requests if args.requests > 0 else 32
+        trace = generate_trace(pinned_spec(n_requests=n))
+    else:
+        with open(args.trace) as f:
+            trace = Trace.from_json(f.read())
+    cfg_full = get_config(args.arch)
+    gran = GranularitySpec.for_backend(
+        cfg_full.ffn.n_experts,
+        head_dim=(cfg_full.attention.head_dim if cfg_full.attention
+                  else 128))
+    hw = get_hardware(args.hardware)
+
+    def clock(width: int, ell: int) -> float:
+        return decode_forward_cost(cfg_full, args.slots, width,
+                                   max(int(ell), 1), gran).time(hw)
+
+    paged = None
+    if args.kv_block_size > 0:
+        paged = PagedKVConfig(block_size=args.kv_block_size,
+                              n_blocks=args.kv_blocks or None)
+    eng = DecodeEngine(cfg, params, batch=args.slots, max_len=args.max_len,
+                       hardware=hw, use_kernel=args.use_kernel, paged=paged)
+    kwargs = {}
+    if args.serve_mode == "mtp":
+        kwargs["mtp_heads"] = init_mtp_heads(
+            jax.random.PRNGKey(5), cfg.d_model, cfg.vocab_size, n_heads=4)
+    loop = ServingLoop(
+        eng, mode=args.serve_mode, step_clock=clock,
+        admission=AdmissionConfig(
+            max_waiting=args.max_waiting or None, preemption=True),
+        **kwargs)
+    report = replay_trace(loop, trace)
+    m = report["metrics"]
+    s = report["serving"]
+    print(f"arch={cfg.name} mode={args.serve_mode} slots={args.slots} "
+          f"trace={trace.fingerprint()} ({len(trace.requests)} requests)")
+    print(f"replayed {m['completed']} requests / {m['tokens']} tokens in "
+          f"{report['makespan_s'] * 1e3:.2f} virtual ms "
+          f"({report['clock']} clock)")
+    if m["completed"]:
+        print(f"ttft p50/p95/p99: {m['ttft_p50_s'] * 1e3:.2f} / "
+              f"{m['ttft_p95_s'] * 1e3:.2f} / "
+              f"{m['ttft_p99_s'] * 1e3:.2f} ms")
+    print(f"goodput {m['goodput_tok_s']:.1f} tok/s of "
+          f"{m['throughput_tok_s']:.1f} tok/s "
+          f"(SLO attainment {m['slo_attainment']})")
+    print(f"pressure: {s['preemptions']} preemptions, {s['resumes']} "
+          f"resumes, {s['rejections']} rejections")
+    for name, g in m["per_class"].items():
+        print(f"  [{name}] {g['completed']}/{g['requests']} completed, "
+              f"{g['rejected']} rejected, "
+              f"attainment={g['slo_attainment']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm_3b")
@@ -183,7 +253,19 @@ def main() -> None:
                          "artifact (refusing a stale spec hash)")
     ap.add_argument("--calibration-path", default="nfp_calibration.json",
                     help="calibration artifact path for --calibration")
+    ap.add_argument("--trace", default=None,
+                    help="replay a loadgen trace through the scheduler: "
+                         "'pinned' (the BENCH spec, sized by --requests) "
+                         "or a trace JSON path (repro.loadgen.Trace)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="trace mode: bound the waiting queue "
+                         "(backpressure; 0 = unbounded)")
     args = ap.parse_args()
+    if args.trace is not None:
+        cfg = get_config(args.arch, reduced=args.tiny)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        _trace_replay(args, cfg, params)
+        return
     if args.kv_block_size > 0 and args.requests <= 0:
         ap.error("--kv-block-size serves the multi-request scheduler; "
                  "add --requests N")

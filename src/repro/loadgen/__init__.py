@@ -1,0 +1,20 @@
+"""repro.loadgen — seeded trace-driven production-traffic harness.
+
+Three pieces: ``trace`` generates deterministic request traces
+(Poisson / MMPP arrivals, heavy-tail length mixes, shared-prefix
+fleets, multi-tenant SLO classes), ``harness`` replays a trace through
+the REAL ``ServingLoop`` on a virtual clock, and ``stats`` turns the
+per-request timelines into TTFT / inter-token-latency percentiles and
+goodput-under-SLO.
+"""
+from repro.loadgen.harness import replay_trace
+from repro.loadgen.stats import (RequestRecord, itls, percentile,
+                                 summarize, ttft)
+from repro.loadgen.trace import (ArrivalSpec, LengthSpec, TenantSpec,
+                                 Trace, TraceRequest, TraceSpec,
+                                 generate_trace, pinned_spec)
+
+__all__ = ["ArrivalSpec", "LengthSpec", "RequestRecord", "TenantSpec",
+           "Trace", "TraceRequest", "TraceSpec", "generate_trace", "itls",
+           "percentile", "pinned_spec", "replay_trace", "summarize",
+           "ttft"]

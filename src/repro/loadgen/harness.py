@@ -1,0 +1,132 @@
+"""Replay a trace through the REAL ``ServingLoop`` on a virtual clock.
+
+Open-loop replay: requests become visible to the loop when the virtual
+clock reaches their ``arrival_s`` — never earlier, so queueing delay,
+backpressure rejections, and preemption pressure emerge from the trace
+shape rather than from submitting everything up front.
+
+The clock is whatever the loop itself runs on.  Each decode step's
+``step_latency_s`` (wall seconds on a real accelerator, or the
+injected ``step_clock`` roofline model on a CPU host — see
+``benchmarks.calibration``) advances time; prefill forwards are priced
+per bucketed ``prefill_log`` entry through the same ``step_clock``
+(bucket positions at bucket context), or by wall time around ``admit``
+when no model clock is injected.  With a model clock the whole replay
+is DETERMINISTIC: two same-seed runs produce byte-identical metrics
+(the BENCH determinism gate).
+
+Token timestamps: every token a request has accumulated by the end of
+a step/admission materializes at that boundary's clock reading — the
+first token at (re)prefill completion, so TTFT = queue wait + prefill,
+and parallel-decoded tokens of one step share a timestamp (ITL 0.0
+gaps are real parallelism).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.loadgen.stats import RequestRecord, summarize
+from repro.loadgen.trace import Trace
+from repro.serving import AdmissionRejected, ServingLoop
+
+__all__ = ["replay_trace"]
+
+
+def replay_trace(loop: ServingLoop, trace: Trace,
+                 max_virtual_s: Optional[float] = None) -> Dict:
+    """Drive ``loop`` with ``trace``; returns a report dict with the
+    per-request ``records``, the ``summarize`` metrics, the loop's own
+    ``stats`` and the final token streams (trace-rid keyed, for the
+    byte-equivalence goldens)."""
+    records = {t.rid: RequestRecord(
+        rid=t.rid, slo_class=t.slo_class, tenant=t.tenant,
+        arrival_s=t.arrival_s) for t in trace.requests}
+    handles: Dict[int, int] = {}             # loop rid -> trace rid
+    eng = loop.engine
+    clocked = loop.step_clock is not None
+    now = 0.0
+    i = 0
+    pending = list(trace.requests)
+
+    def drain(at: float) -> None:
+        """Timestamp every newly materialized token at ``at``."""
+        for loop_rid, trace_rid in handles.items():
+            req = loop.finished.get(loop_rid)
+            if req is None:
+                for r in loop.active.values():
+                    if r.rid == loop_rid:
+                        req = r
+                        break
+            if req is None:                   # still waiting / preempted
+                for r in loop.waiting:
+                    if r.rid == loop_rid:
+                        req = r
+                        break
+            if req is None:
+                continue
+            rec = records[trace_rid]
+            n = int(req.tokens().shape[0])
+            while rec.n_tokens < n:
+                rec.token_times.append(at)
+            rec.preemptions = req.preemptions
+
+    while True:
+        # --- arrivals due by ``now`` enter the loop's queue ------------
+        while i < len(pending) and pending[i].arrival_s <= now + 1e-12:
+            t = pending[i]
+            i += 1
+            try:
+                req = loop.submit(np.asarray(t.prompt, np.int64),
+                                  t.max_tokens, slo_class=t.slo_class)
+                handles[req.rid] = t.rid
+            except AdmissionRejected:
+                records[t.rid].rejected = True
+        # --- admission (prefill cost advances the clock) ---------------
+        pmark = len(eng.prefill_log)
+        t0 = time.perf_counter()
+        loop.admit()
+        if clocked:
+            for e in eng.prefill_log[pmark:]:
+                b = max(int(e["bucket"]), 1)
+                now += loop.step_clock(b, b)
+        else:
+            now += time.perf_counter() - t0
+        drain(now)                        # first tokens land at prefill end
+        if not loop.active:
+            if i < len(pending):
+                if loop.waiting:
+                    raise RuntimeError(
+                        "replay stalled: waiting requests cannot be "
+                        "admitted and nothing is active to retire")
+                now = max(now, pending[i].arrival_s)   # idle-skip
+                continue
+            if loop.waiting:
+                raise RuntimeError(
+                    "replay stalled with requests still waiting")
+            break                                       # fully drained
+        # --- one decode step -------------------------------------------
+        smark = len(loop.step_log)
+        loop.step()
+        now += sum(e.get("step_latency_s", 0.0)
+                   for e in loop.step_log[smark:])
+        drain(now)
+        if max_virtual_s is not None and now > max_virtual_s:
+            break
+
+    streams = {handles[r]: loop.finished[r].tokens()
+               for r in loop.finished if r in handles}
+    recs = [records[t.rid] for t in trace.requests]
+    return {
+        "clock": "simulated" if clocked else "wall",
+        "makespan_s": now,
+        "metrics": summarize(recs, {
+            n: loop.admission.slo(n)
+            for n in {r.slo_class for r in recs}}, now),
+        "records": recs,
+        "serving": loop.stats(),
+        "streams": streams,
+        "trace_fingerprint": trace.fingerprint(),
+    }

@@ -9,13 +9,16 @@ from repro.serving.mtp import (MTPDecoder, MTPSlotAdapter, init_mtp_heads,
                                mtp_loss)
 from repro.serving.paged import (BlockAllocator, BlockManager, PagedKVConfig,
                                  PrefixCache)
-from repro.serving.scheduler import Request, ServingLoop
+from repro.serving.scheduler import (DEFAULT_SLO_CLASSES, AdmissionConfig,
+                                     AdmissionRejected, Request, SLOClass,
+                                     ServingLoop)
 from repro.serving.speculative import (SpeculativeDecoder,
                                        SpeculativeSlotAdapter, ngram_draft)
 
-__all__ = ["BlockAllocator", "BlockManager", "DecodeEngine", "DecodeStats",
-           "ParallelDecodeAlgorithm", "PagedKVConfig", "PrefixCache",
-           "SlotAdapter", "SpeculativeDecoder", "SpeculativeSlotAdapter",
-           "DiffusionBlockDecoder", "DiffusionSlotAdapter", "MTPDecoder",
-           "MTPSlotAdapter", "Request", "ServingLoop", "init_mtp_heads",
-           "mtp_loss", "ngram_draft"]
+__all__ = ["AdmissionConfig", "AdmissionRejected", "BlockAllocator",
+           "BlockManager", "DecodeEngine", "DecodeStats",
+           "DEFAULT_SLO_CLASSES", "ParallelDecodeAlgorithm", "PagedKVConfig",
+           "PrefixCache", "SLOClass", "SlotAdapter", "SpeculativeDecoder",
+           "SpeculativeSlotAdapter", "DiffusionBlockDecoder",
+           "DiffusionSlotAdapter", "MTPDecoder", "MTPSlotAdapter", "Request",
+           "ServingLoop", "init_mtp_heads", "mtp_loss", "ngram_draft"]

@@ -152,6 +152,7 @@ class DecodeEngine:
         # proposals read it); one entry per bucketed prefill forward
         self.last_hidden: Optional[Array] = None
         self.prefill_log: List[Dict] = []
+        self.preempted_slots = 0               # preempt_slot() evictions
 
     def _require_dense(self, what: str) -> None:
         if self.manager is not None:
@@ -481,6 +482,19 @@ class DecodeEngine:
         if self.manager is not None:
             self.manager.release(slot)
             self._bt_device = None             # tables changed
+        self._set_slot_len(slot, 0)
+
+    def preempt_slot(self, slot: int) -> None:
+        """Evict a slot mid-stream (scheduler preemption): its paged
+        blocks return to the pool — except prefix-cache-resident ones,
+        which stay hit-able so the recompute-on-resume prefill can skip
+        them — and the row's committed length zeroes.  The evicted KV is
+        recomputed at re-admission from the request's host-side context,
+        so no device state needs saving."""
+        if self.manager is not None:
+            self.manager.preempt(slot)
+            self._bt_device = None             # tables changed
+        self.preempted_slots += 1
         self._set_slot_len(slot, 0)
 
     # ------------------------------------------------------------------

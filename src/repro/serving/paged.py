@@ -217,6 +217,8 @@ class BlockManager:
         self.cow_copies = 0
         self.evictions = 0
         self.peak_blocks_used = 0
+        self.preemptions = 0
+        self.preempt_blocks_freed = 0
 
     # ------------------------------------------------------------------
     @property
@@ -390,13 +392,29 @@ class BlockManager:
                 new += 1
         return new
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int) -> int:
         """Drop the slot's holds; prefix-cached blocks stay resident
-        under the cache's own hold until eviction recycles them."""
+        under the cache's own hold until eviction recycles them.
+        Returns how many blocks became free."""
+        freed = 0
         for b in self._held[slot]:
-            self.allocator.decref(b)
+            if self.allocator.decref(b):
+                freed += 1
         self._held[slot] = []
         self.tables[slot, :] = self.trash
+        return freed
+
+    def preempt(self, slot: int) -> int:
+        """Eviction-by-preemption: same hold-dropping as ``release`` but
+        counted separately — the scheduler evicts a LIVE request whose
+        KV will be recomputed at resume, so these frees measure wasted
+        (to-be-recomputed) work, not retirement.  Blocks the prefix
+        cache also holds survive; a resume whose context still matches
+        them skips that recompute."""
+        freed = self.release(slot)
+        self.preemptions += 1
+        self.preempt_blocks_freed += freed
+        return freed
 
     # ------------------------------------------------------------------
     def device_tables(self) -> np.ndarray:
@@ -436,4 +454,6 @@ class BlockManager:
             "prefix_hit_tokens": self.hit_tokens,
             "cow_copies": self.cow_copies,
             "prefix_evictions": self.evictions,
+            "kv_preemptions": self.preemptions,
+            "kv_preempt_blocks_freed": self.preempt_blocks_freed,
         }

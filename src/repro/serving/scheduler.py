@@ -38,6 +38,31 @@ propose → verify → commit protocol (``serving.algorithm``):
 Greedy/speculative/mtp streams are identical to running each request
 alone through ``DecodeEngine.greedy_generate``; diffusion streams are
 identical to the solo ``DiffusionBlockDecoder`` at the same block size.
+
+Load-pressure policies (``repro.loadgen`` drives them under traced
+traffic):
+
+  admission control   ``submit`` applies per-loop backpressure (bounded
+                      waiting queue -> ``AdmissionRejected``), and
+                      ``admit`` drains the queue in SLO-class priority
+                      order rather than raw FIFO (FIFO within a class).
+  preemption          ``preempt(slot)`` evicts an active request's KV
+                      (paged blocks return to the pool) and requeues it;
+                      re-admission RECOMPUTES the evicted KV by
+                      prefilling ``req.context`` — the already-emitted
+                      stream and the pending token are host state, so a
+                      preempted request resumes byte-identically to a
+                      never-preempted run (tests/test_loadgen.py
+                      goldens).  With ``AdmissionConfig.preemption`` a
+                      higher-priority arrival preempts the
+                      lowest-priority active victim when the pool or
+                      slot supply blocks its admission.
+
+Admission is ARRIVAL-driven, not step-driven: ``step`` only decodes
+(the hot path ``repro.analysis`` walks), while ``run`` and the trace
+harness call ``admit`` at the arrival boundary — where prompt upload
+and first-token readback are inherent, one batched transfer per
+admission group.
 """
 from __future__ import annotations
 
@@ -53,13 +78,68 @@ import numpy as np
 from repro.kernels.decode_attention.ops import slack_report
 from repro.serving.algorithm import SlotAdapter
 from repro.serving.diffusion import DiffusionSlotAdapter
-from repro.serving.engine import DecodeEngine
+from repro.serving.engine import DecodeEngine, greedy_tokens
 from repro.serving.mtp import MTPSlotAdapter
 from repro.serving.speculative import SpeculativeSlotAdapter
 
-__all__ = ["Request", "ServingLoop"]
+__all__ = ["AdmissionConfig", "AdmissionRejected", "Request", "SLOClass",
+           "ServingLoop", "DEFAULT_SLO_CLASSES"]
 
 Array = jax.Array
+
+
+@dataclass(frozen=True)
+class SLOClass:
+    """One multi-tenant service class: admission priority plus the
+    latency targets ``repro.loadgen.stats`` scores goodput against."""
+
+    name: str
+    priority: int = 0                  # higher admits first, preempts lower
+    ttft_target_s: float = float("inf")
+    itl_target_s: float = float("inf")
+
+
+#: interactive beats default beats batch; targets are TPU-scale virtual
+#: seconds (the load harness measures against the simulated clock)
+DEFAULT_SLO_CLASSES: Dict[str, SLOClass] = {
+    "interactive": SLOClass("interactive", priority=10,
+                            ttft_target_s=0.5, itl_target_s=0.05),
+    "default": SLOClass("default", priority=0,
+                        ttft_target_s=2.0, itl_target_s=0.2),
+    "batch": SLOClass("batch", priority=-10),
+}
+
+
+class AdmissionRejected(RuntimeError):
+    """Backpressure: the waiting queue is at ``max_waiting`` capacity."""
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-control policy knobs (all default to the legacy
+    behavior: unbounded FIFO queue, no preemption, one class).
+
+    ``max_waiting``  bounds the waiting queue; ``submit`` beyond it
+                     raises ``AdmissionRejected`` (backpressure —
+                     callers shed load instead of growing an unbounded
+                     queue whose tail can never meet its SLO).
+    ``preemption``   lets ``admit`` evict the lowest-priority active
+                     request when a STRICTLY higher-priority arrival
+                     cannot get a slot or enough KV blocks.  A victim
+                     re-enters the queue at its own (lower) priority,
+                     so it can never preempt back: no thrash cycles.
+    ``classes``      the SLO-class registry ``submit`` validates
+                     against (None -> ``DEFAULT_SLO_CLASSES``).
+    """
+
+    max_waiting: Optional[int] = None
+    preemption: bool = False
+    classes: Optional[Dict[str, SLOClass]] = None
+
+    def slo(self, name: str) -> SLOClass:
+        table = self.classes if self.classes is not None \
+            else DEFAULT_SLO_CLASSES
+        return table[name]
 
 
 @dataclass
@@ -74,6 +154,8 @@ class Request:
     slot: Optional[int] = None             #   not yet in the cache)
     hidden: Optional[Array] = None         # (d,) state MTP proposes from
     done: bool = False
+    slo_class: str = "default"
+    preemptions: int = 0                   # times evicted + requeued
 
     @property
     def context(self) -> np.ndarray:
@@ -116,12 +198,15 @@ class ServingLoop:
                  block_size: Optional[int] = None, refine_steps: int = 4,
                  mask_id: Optional[int] = None,
                  controller=None,
-                 step_clock: Optional[Callable[[int, int], float]] = None):
+                 step_clock: Optional[Callable[[int, int], float]] = None,
+                 admission: Optional[AdmissionConfig] = None):
         self.engine = engine
         self.eps = eps
         self.max_width = max_width
         self.controller = controller
         self.step_clock = step_clock
+        self.admission = admission if admission is not None \
+            else AdmissionConfig()
         if adapter is None:
             if mode not in self.MODES:
                 raise ValueError(f"unknown serving mode {mode!r}")
@@ -148,6 +233,10 @@ class ServingLoop:
         self.free_slots: List[int] = list(range(engine.batch))
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
+        # load-pressure telemetry (preemption / backpressure policies)
+        self.preempted_total = 0
+        self.resumed_total = 0
+        self.rejected_total = 0
         # engine.prefill_log outlives this loop — remember where ours starts
         self._prefill_log_start = len(engine.prefill_log)
         # per-forward telemetry: active/width/positions/budget plus, when
@@ -159,7 +248,17 @@ class ServingLoop:
         self.step_log: List[Dict] = []
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_tokens: int) -> Request:
+    def submit(self, prompt, max_tokens: int,
+               slo_class: str = "default") -> Request:
+        try:
+            self.admission.slo(slo_class)
+        except KeyError:
+            raise ValueError(f"unknown SLO class {slo_class!r}") from None
+        cap = self.admission.max_waiting
+        if cap is not None and len(self.waiting) >= cap:
+            self.rejected_total += 1
+            raise AdmissionRejected(
+                f"waiting queue at capacity ({cap}); shed load or retry")
         prompt = np.asarray(prompt, np.int64).ravel()
         # reject here, where the caller can handle it per-request — an
         # admission-time failure would abort every in-flight request.
@@ -187,7 +286,8 @@ class ServingLoop:
                 raise ValueError(
                     f"request needs up to {worst} KV blocks but the pool "
                     f"only has {mgr.n_blocks}; it can never be admitted")
-        req = Request(self._next_rid, prompt, int(max_tokens))
+        req = Request(self._next_rid, prompt, int(max_tokens),
+                      slo_class=slo_class)
         self._next_rid += 1
         self.waiting.append(req)
         return req
@@ -220,52 +320,152 @@ class ServingLoop:
         return min(len(req.prompt) + req.max_tokens
                    + self.adapter.headroom(), self.engine.max_len)
 
-    def _admit(self) -> None:
-        """Admission: fill free slots while every active request still
-        fits >= 1 position inside the budget, then prefill ALL newly
-        admitted slots in one bucketed batched forward.
+    @staticmethod
+    def _admit_tokens(req: Request) -> np.ndarray:
+        """Positions a (re-)admission must have committed KV for.  Fresh
+        requests prefill their prompt; a preempted request RECOMPUTES
+        its evicted cache by prefilling ``context`` (prompt + generated
+        minus the pending token) — the stream itself is host state, so
+        nothing re-emits and the resumed request is indistinguishable
+        from one that was never evicted."""
+        return req.context if req.generated else req.prompt
+
+    def _priority(self, req: Request) -> int:
+        return self.admission.slo(req.slo_class).priority
+
+    def _pop_candidate(self) -> Optional[Request]:
+        """Highest-priority waiting request (FIFO within a class: rid
+        order — a preempted request keeps its original rid, so it
+        resumes ahead of later arrivals of its own class)."""
+        if not self.waiting:
+            return None
+        best = min(self.waiting, key=lambda r: (-self._priority(r), r.rid))
+        self.waiting.remove(best)
+        return best
+
+    def _block_cost(self, req: Request) -> int:
+        """Pool blocks this admission consumes: fresh allocations PLUS
+        the evictable cached blocks it would pin (they stop being
+        reclaimable), per ``BlockManager.admission_cost``."""
+        mgr = self.engine.manager
+        if mgr is None:
+            return 0
+        need, pinned = mgr.admission_cost(
+            self._admit_tokens(req).tolist(), self._reserve_len(req))
+        return need + pinned
+
+    def _blocks_left(self, promised: int) -> int:
+        """Free + evictable blocks minus what THIS admission group has
+        already promised to candidates not yet prefilled."""
+        mgr = self.engine.manager
+        return (mgr.available_blocks() - promised) if mgr is not None else 0
+
+    def _fits(self, req: Request, promised: int) -> bool:
+        if not self.free_slots:
+            return False
+        if self.engine.manager is None:
+            return True
+        return self._block_cost(req) <= self._blocks_left(promised)
+
+    def preempt(self, slot: int) -> Request:
+        """Evict the request in ``slot`` mid-stream: its paged blocks
+        return to the pool (dense: the row's length zeroes) and it
+        re-enters the waiting queue for recompute-on-resume.  MTP
+        proposal state is rebuilt from the resume prefill's last hidden,
+        so no device state survives the eviction."""
+        req = self.active.pop(slot)
+        self.engine.preempt_slot(slot)
+        self.free_slots.append(slot)
+        req.slot = None
+        req.hidden = None
+        req.preemptions += 1
+        self.preempted_total += 1
+        self.waiting.appendleft(req)
+        return req
+
+    def _preempt_for(self, cand: Request, promised: int) -> None:
+        """Priority preemption: while ``cand`` (already popped from the
+        queue) cannot get a slot or enough KV blocks, evict the
+        lowest-priority active request — only ever one with priority
+        STRICTLY below the candidate's, so victims (which requeue at
+        their own priority) can never preempt back."""
+        while not self._fits(cand, promised):
+            victims = [s for s, r in self.active.items()
+                       if self._priority(r) < self._priority(cand)]
+            if not victims:
+                return
+            # lowest priority first; latest-admitted (largest rid) tie-
+            # break wastes the least completed work
+            victim = max(victims, key=lambda s: (
+                -self._priority(self.active[s]), self.active[s].rid))
+            self.preempt(victim)
+
+    def admit(self) -> int:
+        """Admission: fill free slots in SLO-priority order while every
+        active request still fits >= 1 position inside the budget, then
+        prefill ALL newly admitted slots in one bucketed batched
+        forward.  Returns the number of requests admitted.
 
         On a paged engine the gate is FREE BLOCKS, not free slots alone:
         a candidate only admits if the pool can cover its whole
         reservation (prompt + max_tokens + headroom, minus whatever its
         prefix-cache hit reuses) — evictable cache-only blocks count as
         available.  Requests that don't fit yet simply wait; retirement
-        and LRU eviction free blocks over time."""
+        and LRU eviction free blocks over time (and, under
+        ``AdmissionConfig.preemption``, a higher-priority candidate
+        evicts the lowest-priority active request instead of waiting).
+
+        Called from ``run`` and the trace harness at the ARRIVAL
+        boundary, never from ``step``: admission is where prompts enter
+        and first tokens leave, so its device<->host traffic is
+        inherent — and batched: one ``greedy_tokens`` readback covers
+        every freshly admitted slot (resumed requests need none, their
+        pending token is host state already)."""
         admitted: Dict[int, Request] = {}
-        mgr = self.engine.manager
-        blocks_left = mgr.available_blocks() if mgr is not None else 0
+        promised = 0                      # blocks owed to this group
         ell = int(self.engine.slot_lens_host.max())
-        while self.waiting and self.free_slots:
-            # prospective budget once the head-of-queue prompt lands
-            cand = self.waiting[0]
-            ell_next = max(ell, len(cand.prompt), 1)
-            budget = self.engine.nfp_budget(self.eps, ell=ell_next)
-            if len(self.active) + len(admitted) >= max(1, budget):
+        while self.free_slots or self.admission.preemption:
+            cand = self._pop_candidate()
+            if cand is None:
                 break
-            if mgr is not None:
-                # budget new blocks AND the evictable cached blocks this
-                # admission would pin (they stop being reclaimable)
-                need, pinned = mgr.admission_cost(cand.prompt.tolist(),
-                                                  self._reserve_len(cand))
-                if need + pinned > blocks_left:
-                    break
-                blocks_left -= need + pinned
-            req = self.waiting.popleft()
+            if self.admission.preemption:
+                self._preempt_for(cand, promised)
+            # prospective budget once the candidate's context lands
+            ell_next = max(ell, len(self._admit_tokens(cand)), 1)
+            budget = self.engine.nfp_budget(self.eps, ell=ell_next)
+            over_budget = (len(self.active) + len(admitted)
+                           >= max(1, budget))
+            if over_budget or not self._fits(cand, promised):
+                # head-of-line within priority order: don't skip ahead,
+                # retirement/eviction frees blocks over time
+                self.waiting.appendleft(cand)
+                break
+            promised += self._block_cost(cand)
             slot = self.free_slots.pop(0)
-            req.slot = slot
-            admitted[slot] = req
+            cand.slot = slot
+            admitted[slot] = cand
             ell = ell_next
         if not admitted:
-            return
+            return 0
         outs = self.engine.prefill_slots(
-            {s: r.prompt for s, r in admitted.items()},
+            {s: self._admit_tokens(r) for s, r in admitted.items()},
             reserve={s: self._reserve_len(r) for s, r in admitted.items()})
+        fresh = sorted(s for s, r in admitted.items() if not r.generated)
+        if fresh:
+            # first token of every fresh request in ONE device argmax +
+            # one small (k,) readback — the admission-boundary transfer
+            first = np.asarray(greedy_tokens(
+                jnp.stack([outs[s][0] for s in fresh])))
+            for i, s in enumerate(fresh):
+                req = admitted[s]
+                req.pending = int(first[i])
+                req.generated = [req.pending]
         for slot, req in admitted.items():
-            logits, hidden = outs[slot]
-            req.pending = int(jnp.argmax(logits))
-            req.generated = [req.pending]
+            if req.preemptions and slot not in fresh:
+                self.resumed_total += 1
             self.active[slot] = req
-            self.adapter.begin(req, hidden)
+            self.adapter.begin(req, outs[slot][1])
+        return len(admitted)
 
     # ------------------------------------------------------------------
     def _attn_slack(self, width: int) -> Optional[Dict]:
@@ -323,10 +523,13 @@ class ServingLoop:
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """One scheduler iteration: admit (batched bucketed prefill),
-        let the adapter drive its shared forward(s) + per-slot commit,
-        retire finished requests.  Returns False when no work remains."""
-        self._admit()
+        """One DECODE iteration: let the adapter drive its shared
+        forward(s) + per-slot commit, retire finished requests.  Returns
+        False when no work remains.  Admission is the caller's move
+        (``run`` / the trace harness invoke ``admit`` at the arrival
+        boundary) — this keeps the steady-state decode path free of the
+        prompt-upload/first-token transfers admission inherently makes
+        (``repro.analysis`` walks exactly this function)."""
         if not self.active:
             return bool(self.waiting)
         budget = self.budget()
@@ -366,8 +569,15 @@ class ServingLoop:
     # ------------------------------------------------------------------
     def run(self) -> Dict[int, np.ndarray]:
         """Serve until the queue drains; returns {rid: tokens}."""
-        while self.step():
-            pass
+        while True:
+            self.admit()
+            if not self.active and self.waiting:
+                raise RuntimeError(
+                    "admission stalled with an empty active set — the "
+                    "pool cannot cover the head-of-queue reservation "
+                    "(submit() should have rejected it)")
+            if not self.step():
+                break
         return {rid: req.tokens() for rid, req in
                 sorted(self.finished.items())}
 
@@ -380,6 +590,9 @@ class ServingLoop:
             "requests": len(self.finished),
             "tokens": total_tokens,
             "forwards": forwards,
+            "preemptions": self.preempted_total,
+            "resumes": self.resumed_total,
+            "rejections": self.rejected_total,
             "positions": total_positions,
             "tokens_per_forward": total_tokens / max(forwards, 1),
             "position_utilization": total_tokens / max(total_positions, 1),

@@ -1,0 +1,485 @@
+"""Trace-driven load harness: preemption byte-equivalence goldens (all
+four serve modes, dense + paged, kernel on/off), trace-generator
+property tests, latency-stat hand fixtures, admission-control policy
+tests, and the BENCH_serving.json schema pin.
+
+The golden contract: a request that gets preempted mid-stream (its KV
+evicted, recomputed on resume) must emit the byte-identical token
+stream of a never-preempted run — the stream and the pending token are
+host state, so eviction must be invisible in the output.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.loadgen import (ArrivalSpec, LengthSpec, RequestRecord,
+                           TenantSpec, Trace, TraceSpec, generate_trace,
+                           itls, percentile, pinned_spec, replay_trace,
+                           summarize, ttft)
+from repro.models import init_model
+from repro.serving import (DEFAULT_SLO_CLASSES, AdmissionConfig,
+                           AdmissionRejected, DecodeEngine, PagedKVConfig,
+                           ServingLoop, init_mtp_heads)
+
+MAX_LEN = 256
+TOKENS = 8
+MODES = ("greedy", "speculative", "mtp", "diffusion")
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("stablelm_3b", reduced=True)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _loop(cfg, params, mode, *, slots=2, paged=None, use_kernel=False,
+          admission=None, step_clock=None, max_len=MAX_LEN):
+    eng = DecodeEngine(cfg, params, batch=slots, max_len=max_len,
+                       use_kernel=use_kernel, paged=paged)
+    kwargs = {}
+    if mode == "mtp":
+        kwargs["mtp_heads"] = init_mtp_heads(
+            jax.random.PRNGKey(5), cfg.d_model, cfg.vocab_size, n_heads=4)
+    if mode == "diffusion":
+        # diffusion's stream depends on the block partition, so the
+        # goldens pin it: preempted and baseline runs must refine the
+        # same blocks
+        kwargs.update(block_size=3, refine_steps=2)
+    return ServingLoop(eng, mode=mode, admission=admission,
+                       step_clock=step_clock, **kwargs)
+
+
+def _prompts(cfg, n, seed=3, lo=4, hi=14):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=int(rng.integers(lo, hi)))
+            for _ in range(n)]
+
+
+def _drive(loop, prompts, tokens=TOKENS, preempt_at=None):
+    """Manual serve loop; optionally force-evict the lowest active slot
+    after ``preempt_at`` decode steps (mid-stream: the victim has
+    emitted tokens and still owes more)."""
+    for p in prompts:
+        loop.submit(p, tokens)
+    steps = 0
+    while True:
+        loop.admit()
+        if preempt_at is not None and steps == preempt_at and loop.active:
+            victim = loop.active[min(loop.active)]
+            assert 0 < len(victim.generated) < victim.max_tokens
+            loop.preempt(min(loop.active))
+            loop.admit()
+        if not loop.step():
+            break
+        steps += 1
+    return {rid: req.tokens() for rid, req in sorted(loop.finished.items())}
+
+
+# ===========================================================================
+# Preemption byte-equivalence goldens
+# ===========================================================================
+
+
+def _golden(cfg, params, mode, *, paged=None, use_kernel=False, slots=2):
+    prompts = _prompts(cfg, 3)
+    base = _drive(_loop(cfg, params, mode, slots=slots, paged=paged,
+                        use_kernel=use_kernel), prompts)
+    loop = _loop(cfg, params, mode, slots=slots, paged=paged,
+                 use_kernel=use_kernel)
+    out = _drive(loop, prompts, preempt_at=2)
+    assert loop.preempted_total >= 1
+    assert loop.resumed_total >= 1
+    if paged is not None:
+        assert loop.stats()["kv_preemptions"] >= 1
+    assert base.keys() == out.keys()
+    for rid in base:
+        assert np.array_equal(base[rid], out[rid]), f"req {rid} diverged"
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [None, PagedKVConfig(block_size=16)],
+                         ids=["dense", "paged"])
+@pytest.mark.parametrize("mode", MODES)
+def test_preemption_golden_xla(model, mode, paged):
+    """Evict + recompute-on-resume is stream-invisible in every serve
+    mode on the XLA path, dense and paged."""
+    cfg, params = model
+    _golden(cfg, params, mode, paged=paged)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("paged", [None, PagedKVConfig(block_size=128)],
+                         ids=["dense", "paged"])
+@pytest.mark.parametrize("mode", ["greedy", "speculative"])
+def test_preemption_golden_kernel(model, mode, paged):
+    """Same contract through the Pallas kernel path (paged pins
+    block_size = K_BLOCK, as in test_paged_kv)."""
+    cfg, params = model
+    _golden(cfg, params, mode, paged=paged, use_kernel=True)
+
+
+def test_preemption_golden_fast(model):
+    """Tier-1 smoke of the golden contract (greedy + small pages)."""
+    cfg, params = model
+    _golden(cfg, params, "greedy", paged=PagedKVConfig(block_size=16))
+
+
+def test_policy_preemption_under_tiny_pool(model):
+    """Policy-driven eviction: a tiny block pool + a higher-priority
+    arrival preempts the batch-class resident, and both streams still
+    match their solo references."""
+    cfg, params = model
+    rng = np.random.default_rng(9)
+    # fixed 12-token prompts: each reservation (12 + 8 tokens) costs
+    # exactly 2 of the pool's 3 blocks, so the second admission MUST
+    # evict the first
+    prompts = [rng.integers(0, cfg.vocab_size, size=12) for _ in range(2)]
+    refs = []
+    for p in prompts:
+        eng = DecodeEngine(cfg, params, batch=1, max_len=MAX_LEN)
+        refs.append(np.asarray(eng.greedy_generate(
+            np.asarray(p)[None], TOKENS)[0]))
+    # pool covers ~one resident's reservation: the interactive arrival
+    # cannot fit until the batch request's blocks are evicted
+    loop = _loop(cfg, params, "greedy", slots=2,
+                 paged=PagedKVConfig(block_size=16, n_blocks=3),
+                 admission=AdmissionConfig(preemption=True))
+    loop.submit(prompts[0], TOKENS, slo_class="batch")
+    loop.admit()
+    loop.step()
+    loop.submit(prompts[1], TOKENS, slo_class="interactive")
+    loop.admit()
+    assert loop.preempted_total == 1
+    active_classes = {r.slo_class for r in loop.active.values()}
+    assert "interactive" in active_classes
+    victim = next(iter(loop.waiting))
+    assert victim.slo_class == "batch" and victim.preemptions == 1
+    while True:
+        loop.admit()
+        if not loop.step():
+            break
+    out = {rid: r.tokens() for rid, r in loop.finished.items()}
+    assert np.array_equal(out[0], refs[0])
+    assert np.array_equal(out[1], refs[1])
+    assert loop.resumed_total == 1
+
+
+# ===========================================================================
+# Admission-control policies
+# ===========================================================================
+
+
+def test_backpressure_rejects_beyond_max_waiting(model):
+    cfg, params = model
+    loop = _loop(cfg, params, "greedy",
+                 admission=AdmissionConfig(max_waiting=2))
+    loop.submit(_prompts(cfg, 1)[0], 4)
+    loop.submit(_prompts(cfg, 1)[0], 4)
+    with pytest.raises(AdmissionRejected):
+        loop.submit(_prompts(cfg, 1)[0], 4)
+    assert loop.rejected_total == 1
+    assert len(loop.waiting) == 2
+
+
+def test_admission_order_is_slo_priority(model):
+    """A later-arriving interactive request admits before an earlier
+    batch request when only one slot is free (FIFO within a class)."""
+    cfg, params = model
+    loop = _loop(cfg, params, "greedy", slots=1)
+    p = _prompts(cfg, 3, seed=7)
+    batch_req = loop.submit(p[0], 4, slo_class="batch")
+    inter_req = loop.submit(p[1], 4, slo_class="interactive")
+    loop.admit()
+    assert [r.rid for r in loop.active.values()] == [inter_req.rid]
+    assert [r.rid for r in loop.waiting] == [batch_req.rid]
+
+
+def test_unknown_slo_class_rejected_at_submit(model):
+    cfg, params = model
+    loop = _loop(cfg, params, "greedy")
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        loop.submit(_prompts(cfg, 1)[0], 4, slo_class="platinum")
+
+
+# ===========================================================================
+# Trace generator properties (hypothesis; shim-compatible strategies)
+# ===========================================================================
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=9999))
+def test_trace_same_seed_byte_identical(seed):
+    spec = TraceSpec(
+        seed=seed, n_requests=20, vocab_size=64,
+        arrivals=ArrivalSpec(kind="mmpp"),
+        tenants=(TenantSpec("a", slo_class="interactive", weight=1.0),
+                 TenantSpec("b", slo_class="batch", weight=2.0,
+                            shared_prefix_len=6, share_prob=0.5)))
+    a, b = generate_trace(spec), generate_trace(spec)
+    assert a.to_json() == b.to_json()
+    assert a.fingerprint() == b.fingerprint()
+    rt = Trace.from_json(a.to_json())
+    assert rt.to_json() == a.to_json()
+    assert rt.fingerprint() == a.fingerprint()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=99),
+       rate=st.sampled_from([5.0, 40.0]))
+def test_poisson_empirical_rate(seed, rate):
+    n = 600
+    spec = TraceSpec(seed=seed, n_requests=n,
+                     arrivals=ArrivalSpec(kind="poisson", rate_rps=rate))
+    tr = generate_trace(spec)
+    arrivals = [r.arrival_s for r in tr.requests]
+    assert arrivals == sorted(arrivals)
+    empirical = n / arrivals[-1]
+    assert 0.75 * rate <= empirical <= 1.25 * rate
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=99))
+def test_mmpp_rate_between_calm_and_burst(seed):
+    spec = TraceSpec(seed=seed, n_requests=600,
+                     arrivals=ArrivalSpec(kind="mmpp", rate_rps=10.0,
+                                          burst_rate_rps=40.0))
+    tr = generate_trace(spec)
+    empirical = len(tr.requests) / tr.requests[-1].arrival_s
+    assert 0.9 * 10.0 <= empirical <= 1.1 * 40.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=99),
+       dist=st.sampled_from(["pareto", "lognormal"]))
+def test_length_mix_heavy_tail_quantiles(seed, dist):
+    lo, hi = 4, 64
+    spec = TraceSpec(
+        seed=seed, n_requests=500,
+        prompt_lens=LengthSpec(dist=dist, lo=lo, hi=hi, alpha=1.1,
+                               mu=2.0, sigma=0.8))
+    lens = [len(r.prompt) for r in generate_trace(spec).requests]
+    assert min(lens) >= lo and max(lens) <= hi
+    med = percentile(lens, 50)
+    mean = sum(lens) / len(lens)
+    # heavy-tail signature: mass near lo, skew pulls the mean right
+    assert med <= 16
+    assert mean > med
+    assert percentile(lens, 99) >= 16
+
+
+def test_shared_prefix_fleet_structure():
+    spec = TraceSpec(
+        seed=5, n_requests=12, vocab_size=64,
+        prompt_lens=LengthSpec(dist="fixed", lo=24, hi=24),
+        tenants=(TenantSpec("fleet", shared_prefix_len=16,
+                            share_prob=1.0),))
+    tr = generate_trace(spec)
+    heads = {r.prompt[:16] for r in tr.requests}
+    tails = {r.prompt[16:] for r in tr.requests}
+    assert len(heads) == 1          # every prompt shares the prefix
+    assert len(tails) > 1           # but streams stay distinct
+
+
+def test_trace_spec_validation():
+    with pytest.raises(ValueError, match="arrival kind"):
+        generate_trace(TraceSpec(arrivals=ArrivalSpec(kind="weibull")))
+    with pytest.raises(ValueError, match="length dist"):
+        generate_trace(TraceSpec(prompt_lens=LengthSpec(dist="zipf")))
+    with pytest.raises(ValueError, match="lo=9 > hi"):
+        generate_trace(TraceSpec(prompt_lens=LengthSpec(lo=9, hi=4)))
+    with pytest.raises(ValueError, match="at least one tenant"):
+        generate_trace(TraceSpec(tenants=()))
+
+
+# ===========================================================================
+# Latency-stat math vs hand-computed fixtures
+# ===========================================================================
+
+
+def test_percentile_nearest_rank_vs_linear():
+    xs = [3, 1, 2, 4]                     # unsorted on purpose
+    assert percentile(xs, 50) == 2        # ceil(0.5*4)=2nd order stat
+    assert percentile(xs, 50, "linear") == 2.5
+    assert percentile(xs, 95) == 4        # ceil(3.8)=4th
+    assert percentile(xs, 95, "linear") == pytest.approx(3.85)
+    assert percentile(xs, 0) == 1
+    assert percentile(xs, 100) == 4
+    assert percentile(xs, 100, "linear") == 4
+
+
+def test_percentile_guards():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([7.0], 1, "linear") == 7.0
+    with pytest.raises(ValueError, match="outside"):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError, match="unknown percentile method"):
+        percentile([1.0, 2.0], 50, "cubic")
+
+
+def test_summarize_hand_fixture():
+    a = RequestRecord(rid=0, slo_class="interactive", arrival_s=0.0,
+                      token_times=[0.1, 0.14, 0.18])       # meets SLO
+    b = RequestRecord(rid=1, slo_class="interactive", arrival_s=0.0,
+                      token_times=[0.9, 1.0])              # TTFT misses
+    c = RequestRecord(rid=2, slo_class="batch", rejected=True)
+    out = summarize([a, b, c], DEFAULT_SLO_CLASSES, makespan_s=2.0)
+    assert out["requests"] == 3
+    assert out["completed"] == 2
+    assert out["rejected"] == 1
+    assert out["tokens"] == 5
+    assert out["throughput_tok_s"] == pytest.approx(2.5)
+    assert out["goodput_tok_s"] == pytest.approx(1.5)      # only rec a
+    assert out["slo_attainment"] == pytest.approx(0.5)
+    assert ttft(a) == pytest.approx(0.1)
+    assert itls(a) == pytest.approx([0.04, 0.04])
+    assert out["ttft_p50_s"] == pytest.approx(0.1)
+    assert out["ttft_p95_s"] == pytest.approx(0.9)
+    assert out["itl_p50_s"] == pytest.approx(0.04)
+    batch = out["per_class"]["batch"]
+    assert batch["completed"] == 0
+    assert batch["slo_attainment"] is None
+    assert batch["goodput_tok_s"] == 0.0
+
+
+def test_summarize_single_token_stream_scored_on_ttft_alone():
+    r = RequestRecord(rid=0, slo_class="interactive", arrival_s=0.0,
+                      token_times=[0.2])
+    out = summarize([r], DEFAULT_SLO_CLASSES, makespan_s=1.0)
+    assert out["slo_attainment"] == 1.0    # no ITL sample: TTFT decides
+    assert out["itl_p50_s"] is None
+
+
+# ===========================================================================
+# Replay harness (real ServingLoop, virtual clock)
+# ===========================================================================
+
+
+def _toy_clock(width, ell):
+    return 1e-3 * width * (1.0 + ell / 256.0)
+
+
+def _fleet_spec(n=5):
+    return TraceSpec(
+        seed=11, n_requests=n, vocab_size=64,
+        arrivals=ArrivalSpec(kind="poisson", rate_rps=100.0),
+        prompt_lens=LengthSpec(dist="fixed", lo=24, hi=24),
+        output_lens=LengthSpec(dist="fixed", lo=3, hi=3),
+        tenants=(TenantSpec("fleet", shared_prefix_len=16,
+                            share_prob=1.0),))
+
+
+def test_replay_fleet_hits_prefix_cache(model):
+    """Shared-prefix fleet traffic reuses cached prefix blocks when
+    replayed through a paged engine (block 16 == prefix len)."""
+    cfg, params = model
+    loop = _loop(cfg, params, "greedy",
+                 paged=PagedKVConfig(block_size=16),
+                 step_clock=_toy_clock)
+    rep = replay_trace(loop, generate_trace(_fleet_spec()))
+    assert rep["serving"]["prefill_positions_saved"] > 0
+    assert rep["serving"]["prefix_hits"] > 0
+    assert rep["metrics"]["completed"] == 5
+
+
+def test_replay_same_seed_metrics_identical(model):
+    """The determinism gate at test scale: two fresh replays of the
+    same trace on the simulated clock produce identical metrics."""
+    cfg, params = model
+    tr = generate_trace(_fleet_spec())
+    reps = []
+    for _ in range(2):
+        loop = _loop(cfg, params, "greedy",
+                     paged=PagedKVConfig(block_size=16),
+                     step_clock=_toy_clock)
+        reps.append(replay_trace(loop, tr))
+    assert reps[0]["metrics"] == reps[1]["metrics"]
+    assert reps[0]["makespan_s"] == reps[1]["makespan_s"]
+    assert reps[0]["clock"] == "simulated"
+
+
+def test_replay_backpressure_rejections_accounted(model):
+    """A near-simultaneous burst against one slot + a one-deep queue:
+    rejections surface in the records, the metrics, and the loop."""
+    cfg, params = model
+    spec = TraceSpec(
+        seed=3, n_requests=6, vocab_size=64,
+        arrivals=ArrivalSpec(kind="poisson", rate_rps=1e6),
+        prompt_lens=LengthSpec(dist="fixed", lo=6, hi=6),
+        output_lens=LengthSpec(dist="fixed", lo=2, hi=2))
+    loop = _loop(cfg, params, "greedy", slots=1,
+                 admission=AdmissionConfig(max_waiting=1),
+                 step_clock=_toy_clock)
+    rep = replay_trace(loop, generate_trace(spec))
+    m = rep["metrics"]
+    assert m["rejected"] > 0
+    assert m["rejected"] == loop.rejected_total
+    assert m["completed"] + m["rejected"] == 6
+    assert sum(r.rejected for r in rep["records"]) == m["rejected"]
+
+
+def test_replay_ttft_includes_queue_wait(model):
+    """Two same-length requests, one slot: the queued request's TTFT
+    must include its wait for the resident to finish."""
+    cfg, params = model
+    spec = TraceSpec(
+        seed=4, n_requests=2, vocab_size=64,
+        arrivals=ArrivalSpec(kind="poisson", rate_rps=1e6),
+        prompt_lens=LengthSpec(dist="fixed", lo=6, hi=6),
+        output_lens=LengthSpec(dist="fixed", lo=4, hi=4))
+    loop = _loop(cfg, params, "greedy", slots=1, step_clock=_toy_clock)
+    rep = replay_trace(loop, generate_trace(spec))
+    ttfts = sorted(ttft(r) for r in rep["records"])
+    assert ttfts[1] > ttfts[0]
+
+
+# ===========================================================================
+# BENCH_serving.json schema + pin
+# ===========================================================================
+
+_BENCH = Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+METRIC_KEYS = ("requests", "completed", "rejected", "preemptions",
+               "tokens", "throughput_tok_s", "goodput_tok_s",
+               "slo_attainment", "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+               "itl_p50_s", "itl_p95_s", "itl_p99_s", "per_class")
+SERVING_KEYS = ("requests", "tokens", "forwards", "preemptions",
+                "resumes", "rejections", "prefill_positions_saved",
+                "kv_preemptions")
+PINNED_KEYS = ("arch", "mode", "slots", "max_len", "kv_block_size",
+               "kv_blocks", "max_waiting", "preemption", "eps",
+               "trace_seed", "trace_requests")
+
+
+def test_bench_serving_schema():
+    """The committed per-PR scorecard parses, carries the full schema,
+    and its trace fingerprint regenerates from the pinned spec."""
+    data = json.loads(_BENCH.read_text())
+    assert data["schema_version"] == 1
+    assert data["bench"] == "serving_load_harness"
+    assert data["clock"] == "simulated"
+    for k in PINNED_KEYS:
+        assert k in data["pinned"], k
+    for k in METRIC_KEYS:
+        assert k in data["metrics"], k
+    for k in SERVING_KEYS:
+        assert k in data["serving"], k
+    m = data["metrics"]
+    assert m["completed"] + m["rejected"] == data["pinned"]["trace_requests"]
+    assert 0.0 <= m["slo_attainment"] <= 1.0
+    assert m["goodput_tok_s"] <= m["throughput_tok_s"] + 1e-9
+    assert data["makespan_s"] > 0
+    # the fingerprint pins the exact pinned-trace bytes
+    spec = pinned_spec(seed=data["pinned"]["trace_seed"],
+                       n_requests=data["pinned"]["trace_requests"])
+    assert generate_trace(spec).fingerprint() == data["trace_fingerprint"]

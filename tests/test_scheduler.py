@@ -96,9 +96,11 @@ def test_slot_isolation_prefill_does_not_clobber(setup):
     loop = ServingLoop(eng, mode="greedy")
     loop.submit(prompts[0], TOKENS)
     loop.submit(prompts[1], TOKENS)
+    loop.admit()
     loop.step()
     lens_before = np.asarray(eng.slot_lens).copy()
     loop.submit(prompts[2], TOKENS)
+    loop.admit()
     loop.step()
     lens_after = np.asarray(eng.slot_lens)
     # resident slots advanced by exactly their commit, newcomer prefilled
